@@ -1,0 +1,185 @@
+"""Shared machinery for the paper-table benchmarks (Tables 2-5, Fig 4).
+
+All experiments run REDUCED architectures on deterministic synthetic data
+(this container is CPU-only and offline), so absolute accuracies differ
+from the paper; the claims being validated are the *relative* ones:
+joint > sequential at matched BOPs, every QASSO stage contributes, and the
+explicit sparsity/bit-width controls are honored exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Q
+from repro.core.bops import model_bops
+from repro.core.qadg import build_qadg
+from repro.core.qasso import QASSO, QASSOConfig
+from repro.core.subnet import construct_subnet
+from repro.data.synthetic import image_batch, qa_batch
+from repro.models.bert import BertEncoder
+from repro.models.cnn import CNN, CNNSpec
+from repro.optim.schedules import constant
+
+# Reduced CNN specs (same family, small widths) for CPU-speed experiments.
+RESNET20_R = CNNSpec("resnet20-r", "resnet", [8, 16, 32],
+                     blocks_per_stage=2)
+RESNET56_R = CNNSpec("resnet56-r", "resnet", [8, 16, 32],
+                     blocks_per_stage=3)
+VGG7_R = CNNSpec("vgg7-r", "vgg", [16, 16, 32, 32, 64, 64], fc_dim=128)
+
+
+def qasso_cfg(steps: int, sparsity: float, b_l=4.0, b_u=16.0,
+              skip_stage: Optional[str] = None) -> QASSOConfig:
+    """Schedule scaled to `steps`, with optional stage ablation (Fig 4a)."""
+    w = max(steps // 10, 1)
+    pp, ps = 3, max(steps // 15, 1)
+    rp, rs = 4, max(steps // 12, 1)
+    cd = max(steps // 4, 1)
+    if skip_stage == "warmup":
+        w = 0
+    if skip_stage == "projection":
+        pp = 1
+        ps = 1
+    if skip_stage == "joint":
+        rp, rs = 1, 1
+    if skip_stage == "cooldown":
+        cd = 1
+    return QASSOConfig(
+        target_sparsity=sparsity, bit_lower=b_l, bit_upper=b_u,
+        warmup_steps=w, projection_periods=pp, projection_steps=ps,
+        bit_reduction=min(2.0, (b_u - b_l) / pp),
+        pruning_periods=rp, pruning_steps=rs, cooldown_steps=cd,
+        base_optimizer="adam", lr_quant=1e-3)
+
+
+def run_geta_cnn(spec: CNNSpec, steps=240, batch=64, sparsity=0.35,
+                 b_l=4.0, b_u=16.0, act_quant=False, lr=3e-3,
+                 skip_stage=None, seed=0):
+    """GETA on a CNN, returns (accuracy, rel_bops, wall_s, subnet meta)."""
+    model = CNN(spec)
+    params = model.init(jax.random.PRNGKey(seed))
+    qparams = model.init_qparams(params, bits_init=b_u,
+                                 act_quant=act_quant)
+    qadg = build_qadg(model.build_graph(act_quant=act_quant).graph)
+    qadg.space.validate(params)
+    cfg = qasso_cfg(steps, sparsity, b_l, b_u, skip_stage)
+    qasso = QASSO(qadg.space, qadg.sites, cfg, constant(lr))
+    state = qasso.init(params, qparams)
+
+    @jax.jit
+    def step(params, qparams, state, batch_):
+        loss, (gx, gq) = jax.value_and_grad(model.loss, argnums=(0, 1))(
+            params, qparams, batch_)
+        p, q, s, m = qasso.update(params, qparams, gx, gq, state)
+        return p, q, s, m, loss
+
+    t0 = time.time()
+    for i in range(cfg.total_steps):
+        b = image_batch(seed, i, batch)
+        params, qparams, state, metrics, loss = step(params, qparams,
+                                                     state, b)
+    wall = time.time() - t0
+
+    test = image_batch(seed + 1, 10_000, 256)
+    acc = float(model.accuracy(params, qparams, test))
+    bops = model_bops(qadg, params, qparams, model.layer_macs(1),
+                      masks=state.keep_mask,
+                      act_bits_default=32.0 if not act_quant else 32.0)
+    sub = construct_subnet(qadg, params, qparams, state.keep_mask)
+    return {"acc": acc, "rel_bops": bops["rel_bops"], "wall_s": wall,
+            "sparsity": sub.meta["sparsity"],
+            "mean_bits": sub.meta["mean_bits"], "loss": float(loss)}
+
+
+def run_baseline_cnn(spec: CNNSpec, steps=240, batch=64, lr=3e-3, seed=0):
+    """Uncompressed FP32 baseline."""
+    model = CNN(spec)
+    params = model.init(jax.random.PRNGKey(seed))
+    from repro.optim.base import adam, tree_add
+    opt = adam()
+    ostate = opt.init(params)
+
+    @jax.jit
+    def step(params, ostate, batch_):
+        loss, gx = jax.value_and_grad(
+            lambda p: model.loss(p, None, batch_))(params)
+        delta, ostate = opt.update(gx, ostate, params, jnp.float32(lr))
+        return tree_add(params, delta), ostate, loss
+
+    for i in range(steps):
+        params, ostate, loss = step(params, ostate, image_batch(seed, i,
+                                                                batch))
+    test = image_batch(seed + 1, 10_000, 256)
+    acc = float(model.accuracy(params, None, test))
+    return {"acc": acc, "rel_bops": 1.0}
+
+
+def run_geta_bert(sparsity: float, steps=200, batch=16, seq=64,
+                  b_l=4.0, b_u=16.0, seed=0):
+    """GETA joint on BERT-small + synthetic QA (Table 3, GETA rows)."""
+    model = BertEncoder(n_layers=2, d_model=64, n_heads=4, d_ff=256,
+                        vocab=512, max_seq=seq)
+    params = model.init(jax.random.PRNGKey(seed))
+    qparams = model.init_qparams(params, bits_init=8.0)
+    qadg = build_qadg(model.build_graph().graph)
+    qadg.space.validate(params)
+    cfg = qasso_cfg(steps, sparsity, b_l, b_u)
+    qasso = QASSO(qadg.space, qadg.sites, cfg, constant(2e-3))
+    state = qasso.init(params, qparams)
+
+    @jax.jit
+    def step(params, qparams, state, batch_):
+        loss, (gx, gq) = jax.value_and_grad(model.loss, argnums=(0, 1))(
+            params, qparams, batch_)
+        return qasso.update(params, qparams, gx, gq, state) + (loss,)
+
+    for i in range(cfg.total_steps):
+        b = qa_batch(seed, i, batch, seq, 512)
+        params, qparams, state, metrics, loss = step(params, qparams,
+                                                     state, b)
+    test = qa_batch(seed + 1, 77_000, 128, seq, 512)
+    em = float(model.exact_match(params, qparams, test))
+    bops = model_bops(qadg, params, qparams,
+                      model.layer_macs(1, seq), masks=state.keep_mask)
+    return {"em": em, "rel_bops": bops["rel_bops"]}
+
+
+def run_prune_then_ptq_bert(sparsity: float, steps=200, batch=16, seq=64,
+                            ptq_bits=8.0, seed=0):
+    """Sequential baseline of Table 3: pruning-aware training (HESSO-style
+    = QASSO with quantization disabled/idle at 32 bits) then post-training
+    quantization of the surviving weights."""
+    model = BertEncoder(n_layers=2, d_model=64, n_heads=4, d_ff=256,
+                        vocab=512, max_seq=seq)
+    params = model.init(jax.random.PRNGKey(seed))
+    # prune-only: bits pinned at 32 (range [32, 32] disables quant pressure)
+    qparams = model.init_qparams(params, bits_init=32.0)
+    qadg = build_qadg(model.build_graph().graph)
+    cfg = qasso_cfg(steps, sparsity, b_l=32.0, b_u=32.0)
+    qasso = QASSO(qadg.space, qadg.sites, cfg, constant(2e-3))
+    state = qasso.init(params, qparams)
+
+    @jax.jit
+    def step(params, qparams, state, batch_):
+        loss, (gx, gq) = jax.value_and_grad(model.loss, argnums=(0, 1))(
+            params, qparams, batch_)
+        return qasso.update(params, qparams, gx, gq, state) + (loss,)
+
+    for i in range(cfg.total_steps):
+        b = qa_batch(seed, i, batch, seq, 512)
+        params, qparams, state, metrics, loss = step(params, qparams,
+                                                     state, b)
+    # PTQ: re-init quantizers at ptq_bits from the trained weights; no
+    # retraining (the paper's PTQ baseline).
+    ptq = model.init_qparams(params, bits_init=ptq_bits)
+    test = qa_batch(seed + 1, 77_000, 128, seq, 512)
+    em = float(model.exact_match(params, ptq, test))
+    bops = model_bops(qadg, params, ptq, model.layer_macs(1, seq),
+                      masks=state.keep_mask)
+    return {"em": em, "rel_bops": bops["rel_bops"]}

@@ -1,0 +1,180 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. `us_per_call` is the wall
+time of one GETA train step on this host (CPU); `derived` carries the
+table's headline quantity (accuracy/EM @ rel-BOPs, ablation deltas, ...).
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_table2_resnet20(fast=False):
+    """Table 2: ResNet20/CIFAR10 — GETA structured vs baseline (wt quant)."""
+    from benchmarks.geta_experiments import (RESNET20_R, run_baseline_cnn,
+                                             run_geta_cnn)
+    steps = 120 if fast else 240
+    base = run_baseline_cnn(RESNET20_R, steps=steps)
+    geta = run_geta_cnn(RESNET20_R, steps=steps, sparsity=0.35,
+                        act_quant=False)
+    us = geta["wall_s"] / max(steps, 1) * 1e6
+    _row("table2_resnet20_baseline", 0.0,
+         f"acc={base['acc']:.3f};rel_bops=1.0")
+    _row("table2_resnet20_geta", us,
+         f"acc={geta['acc']:.3f};rel_bops={geta['rel_bops']:.4f};"
+         f"sparsity={geta['sparsity']:.2f};bits={geta['mean_bits']:.1f}")
+    return {"base": base, "geta": geta}
+
+
+def bench_table4_vgg7(fast=False):
+    """Table 4: VGG7/CIFAR10 — weight AND activation quantization."""
+    from benchmarks.geta_experiments import (VGG7_R, run_baseline_cnn,
+                                             run_geta_cnn)
+    steps = 100 if fast else 200
+    base = run_baseline_cnn(VGG7_R, steps=steps)
+    geta = run_geta_cnn(VGG7_R, steps=steps, sparsity=0.5, act_quant=True)
+    us = geta["wall_s"] / max(steps, 1) * 1e6
+    _row("table4_vgg7_baseline", 0.0, f"acc={base['acc']:.3f};rel_bops=1.0")
+    _row("table4_vgg7_geta_wa", us,
+         f"acc={geta['acc']:.3f};rel_bops={geta['rel_bops']:.4f}")
+    return {"base": base, "geta": geta}
+
+
+def bench_table5_resnet56(fast=False):
+    """Table 5 analogue: deeper CNN at two sparsities (40%/50%)."""
+    from benchmarks.geta_experiments import RESNET56_R, run_geta_cnn
+    steps = 100 if fast else 200
+    out = {}
+    for sp in (0.4, 0.5):
+        r = run_geta_cnn(RESNET56_R, steps=steps, sparsity=sp)
+        us = r["wall_s"] / max(steps, 1) * 1e6
+        _row(f"table5_resnet56_sp{int(sp*100)}", us,
+             f"acc={r['acc']:.3f};rel_bops={r['rel_bops']:.4f}")
+        out[sp] = r
+    return out
+
+
+def bench_table3_bert(fast=False):
+    """Table 3: BERT/SQuAD-style — GETA joint vs prune-then-PTQ."""
+    from benchmarks.geta_experiments import (run_geta_bert,
+                                             run_prune_then_ptq_bert)
+    steps = 100 if fast else 200
+    sparsities = (0.3, 0.5) if fast else (0.1, 0.3, 0.5, 0.7)
+    out = {}
+    for sp in sparsities:
+        t0 = time.time()
+        joint = run_geta_bert(sp, steps=steps)
+        us = (time.time() - t0) / steps * 1e6
+        seq = run_prune_then_ptq_bert(sp, steps=steps)
+        _row(f"table3_bert_sp{int(sp*100)}_geta", us,
+             f"em={joint['em']:.3f};rel_bops={joint['rel_bops']:.4f}")
+        _row(f"table3_bert_sp{int(sp*100)}_prune_ptq", us,
+             f"em={seq['em']:.3f};rel_bops={seq['rel_bops']:.4f}")
+        out[sp] = {"joint": joint, "sequential": seq}
+    return out
+
+
+def bench_fig4a_ablation(fast=False):
+    """Fig 4a: remove each QASSO stage, measure the accuracy drop."""
+    from benchmarks.geta_experiments import RESNET56_R, run_geta_cnn
+    steps = 80 if fast else 160
+    full = run_geta_cnn(RESNET56_R, steps=steps, sparsity=0.35)
+    _row("fig4a_full", 0.0, f"acc={full['acc']:.3f}")
+    out = {"full": full}
+    for stage in ("warmup", "projection", "joint", "cooldown"):
+        r = run_geta_cnn(RESNET56_R, steps=steps, sparsity=0.35,
+                         skip_stage=stage)
+        _row(f"fig4a_no_{stage}", 0.0,
+             f"acc={r['acc']:.3f};delta={r['acc']-full['acc']:+.3f}")
+        out[stage] = r
+    return out
+
+
+def bench_fig4b_frontier(fast=False):
+    """Fig 4b: sparsity x bit-range compression frontier."""
+    from benchmarks.geta_experiments import RESNET56_R, run_geta_cnn
+    steps = 60 if fast else 120
+    grid_sp = (0.3, 0.6) if fast else (0.3, 0.5, 0.7)
+    grid_b = ((4, 6),) if fast else ((2, 4), (4, 6), (6, 8))
+    out = {}
+    for sp in grid_sp:
+        for (bl, bu) in grid_b:
+            r = run_geta_cnn(RESNET56_R, steps=steps, sparsity=sp,
+                             b_l=float(bl), b_u=float(bu) + 8)
+            _row(f"fig4b_sp{int(sp*100)}_b{bl}", 0.0,
+                 f"acc={r['acc']:.3f};rel_bops={r['rel_bops']:.4f}")
+            out[(sp, bl)] = r
+    return out
+
+
+def bench_kernel_fake_quant(fast=False):
+    """Fused fake-quant op vs eager op-chain (CPU timings; the TPU win is
+    the single HBM round-trip, see DESIGN.md)."""
+    from repro.core.quant import fake_quant
+    from repro.kernels.ref import fake_quant_fwd_ref
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024, 1024))
+    d, qm, t = jnp.float32(0.05), jnp.float32(1.2), jnp.float32(0.9)
+
+    fused = jax.jit(lambda x: fake_quant(x, d, qm, t))
+    ref = jax.jit(lambda x: fake_quant_fwd_ref(x, d, qm, t))
+    fused(x).block_until_ready()
+    ref(x).block_until_ready()
+    n = 20 if fast else 50
+    t0 = time.time()
+    for _ in range(n):
+        fused(x).block_until_ready()
+    tf = (time.time() - t0) / n * 1e6
+    t0 = time.time()
+    for _ in range(n):
+        ref(x).block_until_ready()
+    tr = (time.time() - t0) / n * 1e6
+    _row("kernel_fake_quant_fused", tf, f"ref_us={tr:.1f}")
+    return {"fused_us": tf, "ref_us": tr}
+
+
+def bench_serve_decode(fast=False):
+    """Decode throughput of the quantized serving path (smoke scale)."""
+    from repro.launch.serve import serve_loop
+    t0 = time.time()
+    seq = serve_loop("internlm2-1.8b", smoke=True, batch=2, prompt_len=4,
+                     gen=8 if fast else 16, verbose=False)
+    us = (time.time() - t0) * 1e6 / max(seq.shape[1], 1)
+    _row("serve_decode_smoke", us, f"tokens={int(np.prod(seq.shape))}")
+    return {"us_per_token": us}
+
+
+ALL = [bench_table2_resnet20, bench_table3_bert, bench_table4_vgg7,
+       bench_table5_resnet56, bench_fig4a_ablation, bench_fig4b_frontier,
+       bench_kernel_fake_quant, bench_serve_decode]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced steps/sweeps (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            fn(fast=args.fast)
+        except Exception as e:  # report, keep the harness going
+            _row(fn.__name__ + "_FAILED", 0.0, f"{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

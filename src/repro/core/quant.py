@@ -1,0 +1,230 @@
+"""Learnable quantization with parameters (d, q_m, t) — paper §3, Eqs (1)-(6).
+
+The quantizer maps a tensor x through a nonlinear clip
+
+    x~ = sgn(x) * clip_{q_m}^t(|x|),   clip_{q_m}^t(a) = a^t       if a <= q_m
+                                                         (q_m)^t   if a >  q_m
+then symmetric uniform quantization
+
+    x_Q = d * round(x~ / d)                                         (Eq 2)
+
+The bit width is a *derived* quantity (Eq 3):
+
+    b = log2((q_m)^t / d + 1) + 1
+
+Gradients of x_Q w.r.t. (d, t, q_m) follow the straight-through estimator
+(Eqs 4-6); the gradient w.r.t. x is STE identity inside the clip range and
+rescaled by the clip boundary outside (standard PACT-style behaviour).
+
+All functions are pure jnp and jit/vmap/pjit friendly. The Pallas-fused
+version lives in `repro.kernels`; this module is the mathematical source of
+truth (the kernels' ref oracle imports from here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# Numerical guards: t and q_m pass through powers/logs.
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Per-layer learnable quantization parameters (pytree).
+
+    Each field is a scalar (per-tensor quantization, as in the paper) held in
+    float32 regardless of the activation dtype so that tiny gradient updates
+    are not lost to bf16 rounding.
+    """
+
+    d: jax.Array    # quantization step size  (> 0)
+    q_m: jax.Array  # clip maximum            (> 0)
+    t: jax.Array    # shaping exponent        (> 0), t=1 -> uniform
+
+    def tree_flatten(self):
+        return (self.d, self.q_m, self.t), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    QuantParams, QuantParams.tree_flatten, QuantParams.tree_unflatten
+)
+
+
+def init_quant_params(
+    w: jax.Array | None = None,
+    *,
+    q_m: float | jax.Array | None = None,
+    bits: float = 32.0,
+    t: float = 1.0,
+) -> QuantParams:
+    """Paper Appendix C initialization: t = 1, q_m = max|W|, d chosen so the
+    derived bit width equals `bits` (32 for CNNs-from-scratch, 8 for BERT)."""
+    if q_m is None:
+        if w is None:
+            raise ValueError("need either a weight tensor or explicit q_m")
+        q_m = jnp.maximum(jnp.max(jnp.abs(w)).astype(jnp.float32), 1e-3)
+    q_m = jnp.asarray(q_m, jnp.float32)
+    t_arr = jnp.asarray(t, jnp.float32)
+    d = step_size_for_bits(q_m, t_arr, jnp.asarray(bits, jnp.float32))
+    return QuantParams(d=d, q_m=q_m, t=t_arr)
+
+
+def bit_width(d: jax.Array, q_m: jax.Array, t: jax.Array) -> jax.Array:
+    """Eq (3): b = log2((q_m)^t / d + 1) + 1."""
+    peak = jnp.power(jnp.maximum(q_m, _EPS), t)
+    return jnp.log2(peak / jnp.maximum(d, _EPS) + 1.0) + 1.0
+
+
+def step_size_for_bits(q_m: jax.Array, t: jax.Array, bits: jax.Array) -> jax.Array:
+    """Invert Eq (3): the d that realizes a given bit width."""
+    peak = jnp.power(jnp.maximum(q_m, _EPS), t)
+    return peak / (jnp.exp2(bits - 1.0) - 1.0)
+
+
+def step_size_bounds(
+    q_m: jax.Array, t: jax.Array, b_l: jax.Array, b_u: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """[d_min, d_max] such that b in [b_l, b_u] (Alg 3 line 3).
+
+    b is decreasing in d, so b <= b_u  <=>  d >= d(b_u)  and
+    b >= b_l  <=>  d <= d(b_l)."""
+    d_min = step_size_for_bits(q_m, t, b_u)
+    d_max = step_size_for_bits(q_m, t, b_l)
+    return d_min, d_max
+
+
+def clip_qmt(x_abs: jax.Array, q_m: jax.Array, t: jax.Array) -> jax.Array:
+    """clip_{q_m}^t(|x|) of Eq (13) — the nonlinear clipped magnitude."""
+    q_m = jnp.maximum(q_m, _EPS)
+    a = jnp.minimum(x_abs, q_m)
+    return jnp.power(jnp.maximum(a, _EPS), t) * (x_abs > 0)
+
+
+def residual(x_abs: jax.Array, d: jax.Array, q_m: jax.Array, t: jax.Array) -> jax.Array:
+    """R(x) of Eq (14): round(x~/d) - x~/d for the clipped magnitude."""
+    xt = clip_qmt(x_abs, q_m, t)
+    r = xt / jnp.maximum(d, _EPS)
+    return jnp.round(r) - r
+
+
+def _fake_quant_fwd_math(x, d, q_m, t):
+    """Shared forward math (Eqs 1-2). Returns x_Q with the dtype of x."""
+    d32 = jnp.maximum(d.astype(jnp.float32), _EPS)
+    sign = jnp.sign(x).astype(jnp.float32)
+    xt = clip_qmt(jnp.abs(x).astype(jnp.float32), q_m.astype(jnp.float32),
+                  t.astype(jnp.float32))
+    xq = d32 * jnp.round(xt / d32) * sign
+    return xq.astype(x.dtype)
+
+
+@jax.custom_vjp
+def fake_quant(x: jax.Array, d: jax.Array, q_m: jax.Array, t: jax.Array) -> jax.Array:
+    """Differentiable quantize-dequantize with learnable (d, q_m, t).
+
+    Forward: Eqs (1)-(2). Backward: STE for x, Eqs (4)-(6) for the scalars.
+    """
+    return _fake_quant_fwd_math(x, d, q_m, t)
+
+
+def _fake_quant_fwd(x, d, q_m, t):
+    y = _fake_quant_fwd_math(x, d, q_m, t)
+    return y, (x, d, q_m, t)
+
+
+def _fake_quant_bwd(res, g):
+    x, d, q_m, t = res
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    d32 = jnp.maximum(d.astype(jnp.float32), _EPS)
+    qm32 = jnp.maximum(q_m.astype(jnp.float32), _EPS)
+    t32 = t.astype(jnp.float32)
+
+    ax = jnp.abs(x32)
+    sign = jnp.sign(x32)
+    inside = ax <= qm32
+    safe_ax = jnp.maximum(ax, _EPS)
+
+    # --- dL/dx: STE. Inside the clip: d x_Q/dx ~ d x~/dx = t*|x|^{t-1}
+    # treated as 1 by the STE (the paper's STE passes the gradient through
+    # the round *and* the power; outside the clip the gradient is 0).
+    dx = jnp.where(inside, g32, 0.0).astype(x.dtype)
+
+    # --- Eq (4): dx_Q/dd = sgn(x) * (round(v) - v), v = clip^t/d.
+    v = clip_qmt(ax, qm32, t32) / d32
+    dd_elem = sign * (jnp.round(v) - v)
+    dd = jnp.sum(g32 * dd_elem).astype(jnp.float32)
+
+    # --- Eq (5): dx_Q/dt = sgn(x) * clip^t * log(clip_base)
+    base = jnp.where(inside, safe_ax, qm32)
+    dt_elem = sign * jnp.power(base, t32) * jnp.log(base)
+    dt = jnp.sum(g32 * dt_elem).astype(jnp.float32)
+
+    # --- Eq (6): dx_Q/dq_m = 0 inside, sgn(x)*t*q_m^{t-1} outside.
+    dqm_elem = jnp.where(inside, 0.0, sign * t32 * jnp.power(qm32, t32 - 1.0))
+    dqm = jnp.sum(g32 * dqm_elem).astype(jnp.float32)
+
+    return dx, dd.reshape(d.shape), dqm.reshape(q_m.shape), dt.reshape(t.shape)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def quantize_int(x: jax.Array, qp: QuantParams) -> tuple[jax.Array, jax.Array]:
+    """Deployment-path quantization: integer codes + scale.
+
+    Returns (codes int8/int16/int32 depending on derived bits, scale d).
+    Codes satisfy x_Q = codes * d (on the nonlinearly-mapped magnitude)."""
+    d32 = jnp.maximum(qp.d.astype(jnp.float32), _EPS)
+    sign = jnp.sign(x).astype(jnp.float32)
+    xt = clip_qmt(jnp.abs(x).astype(jnp.float32), qp.q_m, qp.t)
+    codes = jnp.round(xt / d32) * sign
+    return codes, d32
+
+
+def dequantize_int(codes: jax.Array, d: jax.Array,
+                   out_dtype=jnp.float32) -> jax.Array:
+    """Reconstruct the effective weight x_Q = codes * d.
+
+    Note: per Eqs (1)-(2) the quantized value x_Q lives in the *shaped*
+    domain (the t-companding is part of the learned effective weight and is
+    never inverted at inference) — so dequantization is a single multiply."""
+    return (codes * d).astype(out_dtype)
+
+
+def storage_bits(qp: QuantParams) -> jax.Array:
+    """Integer bits needed to store codes of this quantizer (ceil of Eq 3)."""
+    return jnp.ceil(bit_width(qp.d, qp.q_m, qp.t))
+
+
+def tree_bit_widths(qparams: dict[str, QuantParams]) -> dict[str, jax.Array]:
+    return {k: bit_width(v.d, v.q_m, v.t) for k, v in qparams.items()}
+
+
+def project_step_size(qp: QuantParams, b_l: float | jax.Array,
+                      b_u: float | jax.Array) -> QuantParams:
+    """PPSG projection (Alg 3 lines 3-4): clamp d into [d_min, d_max].
+
+    Only d is projected — q_m and t are left untouched (paper §5.1: their
+    exponential gradient terms make abrupt projection destabilizing)."""
+    d_min, d_max = step_size_bounds(qp.q_m, qp.t,
+                                    jnp.asarray(b_l, jnp.float32),
+                                    jnp.asarray(b_u, jnp.float32))
+    return QuantParams(d=jnp.clip(qp.d, d_min, d_max), q_m=qp.q_m, t=qp.t)
+
+
+def positivity_guard(qp: QuantParams) -> QuantParams:
+    """Keep the parameterization in its valid open domain after an SGD step."""
+    return QuantParams(
+        d=jnp.maximum(qp.d, 1e-8),
+        q_m=jnp.maximum(qp.q_m, 1e-6),
+        t=jnp.clip(qp.t, 0.05, 4.0),
+    )

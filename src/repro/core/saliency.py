@@ -1,0 +1,129 @@
+"""Group saliency scores — HESSO [13] style, used at Alg 2 line 11.
+
+For each minimally-removable structure (unit) g the score mixes three
+signals computed on the (units, W) group matrix view:
+
+  magnitude   : ||x_g||_2 / sqrt(W)          (bigger -> more important)
+  cosine      : |cos(x_g, grad_g)|           (alignment of weight & gradient:
+                                              low alignment -> step won't
+                                              restore the group if removed)
+  first-order : |<grad_g, x_g>|              (Taylor expansion of loss change
+                                              when zeroing the group)
+
+Scores are normalized per family (z-score) before global ranking so
+families of very different widths compete fairly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.groups import GroupFamily, PruningSpace
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class SaliencyConfig:
+    w_magnitude: float = 1.0
+    w_cosine: float = 0.25
+    w_taylor: float = 1.0
+    normalize: bool = True
+
+
+def family_scores(space: PruningSpace, family: GroupFamily,
+                  params: dict, grads: dict,
+                  cfg: SaliencyConfig = SaliencyConfig()) -> jax.Array:
+    """(units,) saliency for one family. Higher = more important.
+
+    Computed as per-member fused reductions (sum of squares / dot per unit,
+    accumulated across members) — NEVER as a concatenated (units, W) group
+    matrix: concatenating members with different shardings forces GSPMD to
+    replicate every weight in f32 (measured ~100 GB/device on the 398B
+    configs)."""
+    u = family.units
+
+    def unit_reduce(val, m):
+        """Sum `val` over every axis but the member axis, then fold the
+        unit grouping — all in the tensor's ORIGINAL layout. (member_view's
+        moveaxis+reshape flattens sharded dims, which GSPMD can only do by
+        all-gathering — measured ~150 GB/device of gathered f32 expert
+        stacks on jamba-398b.)"""
+        axes = tuple(i for i in range(val.ndim) if i != m.axis)
+        v = jnp.sum(val, axis=axes)               # (axis_len,)
+        if m.unit_size == 1:
+            return v
+        if m.layout == "contiguous":
+            return jnp.sum(v.reshape(u, m.unit_size), axis=1)
+        return jnp.sum(v.reshape(m.unit_size, u), axis=0)
+
+    dot = jnp.zeros((u,), jnp.float32)
+    x2 = jnp.zeros((u,), jnp.float32)
+    g2 = jnp.zeros((u,), jnp.float32)
+    w = 0
+    for m in family.members:
+        xv = params[m.param].astype(jnp.float32)
+        gv = grads[m.param].astype(jnp.float32)
+        dot = dot + unit_reduce(xv * gv, m)
+        x2 = x2 + unit_reduce(jnp.square(xv), m)
+        g2 = g2 + unit_reduce(jnp.square(gv), m)
+        w += xv.size // u
+
+    mag = jnp.sqrt(x2) / jnp.sqrt(float(max(w, 1)))
+    cos = jnp.abs(dot) / jnp.maximum(jnp.sqrt(x2 * g2), _EPS)
+    taylor = jnp.abs(dot)
+
+    def norm(v):
+        if not cfg.normalize:
+            return v
+        mu = jnp.mean(v)
+        sd = jnp.std(v) + _EPS
+        return (v - mu) / sd
+
+    return (cfg.w_magnitude * norm(mag)
+            + cfg.w_cosine * norm(cos)
+            + cfg.w_taylor * norm(taylor))
+
+
+def global_redundancy_partition(space: PruningSpace, params: dict, grads: dict,
+                                n_redundant: jax.Array,
+                                cfg: SaliencyConfig = SaliencyConfig(),
+                                frozen: dict | None = None,
+                                pinned: dict | None = None
+                                ) -> dict[str, jax.Array]:
+    """Alg 2 line 12: pick the `n_redundant` globally lowest-saliency units.
+
+    Returns per-family float masks: 1.0 = redundant (in G_R), 0.0 = important.
+    `n_redundant` may be a traced integer (the progressive schedule), so the
+    partition is computed by global rank rather than a static top-k.
+
+    `frozen`: per-family masks of units that must stay important — their
+    score is lifted to +inf.
+    `pinned`: per-family masks of units already chosen as redundant in an
+    earlier period (sticky pruning) — their score is sunk to -inf so they
+    stay in G_R *and count toward* n_redundant (the progressive schedule
+    stays exact).
+    """
+    fams = space.prunable_families()
+    scores = []
+    for fam in fams:
+        s = family_scores(space, fam, params, grads, cfg)
+        if frozen is not None and fam.name in frozen:
+            s = jnp.where(frozen[fam.name] > 0.5, jnp.inf, s)
+        if pinned is not None and fam.name in pinned:
+            s = jnp.where(pinned[fam.name] > 0.5, -jnp.inf, s)
+        scores.append(s)
+    flat = jnp.concatenate(scores) if scores else jnp.zeros((0,))
+    # rank 0 = least salient
+    order = jnp.argsort(flat)
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(flat.shape[0]))
+    redundant_flat = (ranks < n_redundant).astype(jnp.float32)
+
+    out = {}
+    off = 0
+    for fam in fams:
+        out[fam.name] = redundant_flat[off: off + fam.units]
+        off += fam.units
+    return out

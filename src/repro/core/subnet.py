@@ -1,0 +1,70 @@
+"""construct_subnet(): materialize the pruned + quantized deployable model.
+
+Mirrors the paper's Framework Usage line 8. Produces:
+- physically sliced parameters (pruned units removed),
+- integer weight codes + scales for every weight-quant site (the
+  `repro.kernels.quant_matmul` serving path),
+- a manifest (kept units per family, per-site bit widths, BOPs summary).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qadg import QADG
+from repro.core.quant import QuantParams, bit_width, quantize_int
+
+
+@dataclasses.dataclass
+class Subnet:
+    params: dict[str, jax.Array]            # sliced real-valued params
+    int_weights: dict[str, jax.Array]       # param name -> integer codes
+    scales: dict[str, jax.Array]            # param name -> step size d
+    bits: dict[str, float]                  # site name -> bit width
+    kept_units: dict[str, np.ndarray]       # family -> surviving unit ids
+    meta: dict[str, Any]
+
+
+def construct_subnet(qadg: QADG, params: dict, qparams: dict,
+                     keep_masks: dict) -> Subnet:
+    sliced, kept = qadg.space.materialize(params, keep_masks)
+
+    int_weights: dict[str, jax.Array] = {}
+    scales: dict[str, jax.Array] = {}
+    bits: dict[str, float] = {}
+    for site in qadg.sites:
+        qp: QuantParams = qparams[site.name]
+        b = float(bit_width(qp.d, qp.q_m, qp.t))
+        bits[site.name] = b
+        if site.kind != "weight":
+            continue
+        for pname in site.quantized_params:
+            if pname not in sliced:
+                continue
+            codes, d = quantize_int(sliced[pname], qp)
+            # narrowest container that holds the codes
+            nbits = int(np.ceil(b))
+            if nbits <= 8:
+                store = codes.astype(jnp.int8)
+            elif nbits <= 16:
+                store = codes.astype(jnp.int16)
+            else:
+                store = codes.astype(jnp.int32)
+            int_weights[pname] = store
+            scales[pname] = d
+
+    n_total = qadg.space.total_units()
+    n_kept = sum(int(np.sum(np.asarray(keep_masks[f.name]) > 0.5))
+                 for f in qadg.space.prunable_families())
+    return Subnet(
+        params=sliced, int_weights=int_weights, scales=scales, bits=bits,
+        kept_units=kept,
+        meta={
+            "sparsity": 1.0 - n_kept / max(n_total, 1),
+            "mean_bits": float(np.mean(list(bits.values()))) if bits else 32.0,
+            "n_sites": len(qadg.sites),
+        })

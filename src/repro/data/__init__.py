@@ -1,0 +1,2 @@
+from repro.data.synthetic import (batch_for, image_batch, lm_batch, qa_batch,
+                                  vlm_batch)

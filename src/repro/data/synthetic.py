@@ -1,0 +1,81 @@
+"""Deterministic synthetic data pipelines (stateless, shardable, replayable).
+
+Every batch is a pure function of (seed, step) — the property the fault-
+tolerance design relies on: after restart at step k, batch(k) is bit-
+identical, so no data-state checkpointing is needed and elastic reshards
+replay exactly.
+
+LM stream: a structured Markov-ish token process (next token depends on the
+previous token plus a position signal) so models measurably learn; labels
+for CIFAR-like images depend on class-conditional means so CNNs can fit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
+             n_codebooks: int = 0) -> dict:
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    shape = (batch, seq, n_codebooks) if n_codebooks else (batch, seq)
+    k1, k2 = jax.random.split(key)
+    base = jax.random.randint(k1, shape, 0, vocab)
+    # learnable structure: token t+1 correlated with token t
+    shifted = jnp.roll(base, 1, axis=1)
+    mix = jax.random.bernoulli(k2, 0.7, shape)
+    tokens = jnp.where(mix, (shifted * 31 + 7) % vocab, base)
+    return {"tokens": tokens.astype(jnp.int32)}
+
+
+def qa_batch(seed: int, step: int, batch: int, seq: int, vocab: int) -> dict:
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 7919), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (batch, seq), 0, vocab)
+    start = jax.random.randint(k2, (batch,), 0, seq // 2)
+    length = jax.random.randint(k3, (batch,), 1, seq // 4)
+    end = jnp.minimum(start + length, seq - 1)
+    # plant an answer signature the model can find: marker tokens
+    marker_s = vocab - 2
+    marker_e = vocab - 1
+    b = jnp.arange(batch)
+    tokens = tokens.at[b, start].set(marker_s)
+    tokens = tokens.at[b, end].set(marker_e)
+    return {"tokens": tokens.astype(jnp.int32),
+            "start": start.astype(jnp.int32), "end": end.astype(jnp.int32)}
+
+
+def image_batch(seed: int, step: int, batch: int, hw: int = 32,
+                classes: int = 10) -> dict:
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 104729), step)
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (batch,), 0, classes)
+    noise = jax.random.normal(k2, (batch, hw, hw, 3))
+    # class-conditional mean pattern (fixed by class id, learnable)
+    base_key = jax.random.PRNGKey(12345)
+    means = jax.random.normal(base_key, (classes, hw, hw, 3)) * 1.5
+    images = means[labels] + noise
+    return {"images": images, "labels": labels}
+
+
+def vlm_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
+              patches: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    out = lm_batch(seed, step, batch, seq, vocab)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 31337), step)
+    out["vision_embeds"] = (jax.random.normal(
+        key, (batch, patches, d_model)) * 0.02).astype(dtype)
+    return out
+
+
+def batch_for(cfg, seed: int, step: int, batch: int, seq: int) -> dict:
+    """Model-family-aware batch builder (the stub 'modality frontend')."""
+    if cfg.family == "audio":
+        return lm_batch(seed, step, batch, seq, cfg.vocab,
+                        n_codebooks=cfg.num_codebooks)
+    if cfg.family == "vlm":
+        return vlm_batch(seed, step, batch, seq - cfg.vision_patches,
+                         cfg.vocab, cfg.vision_patches, cfg.d_model,
+                         dtype=jnp.bfloat16 if cfg.dtype == "bfloat16"
+                         else jnp.float32)
+    return lm_batch(seed, step, batch, seq, cfg.vocab)

@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (DEFAULT_RULES, ShardingPlan,
+                                        batch_spec, constrain, make_plan)

@@ -1,0 +1,109 @@
+"""Distributed-optimization tricks: gradient compression, collective
+scheduling helpers.
+
+Gradient compression (int8 + per-block scales, error feedback):
+  A bf16 ring all-reduce moves 2*(k-1)/k * N * 2 bytes per link. Replacing
+  it with quantize -> all-gather(int8 codes + f32 block scales) -> local
+  reduce moves (k-1)/k * N * 1 bytes: a ~4x wire reduction. The error-
+  feedback residual (kept in optimizer state) restores convergence. This is
+  expressed with shard_map so the collective is explicit in the HLO and the
+  roofline's collective term sees the reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+BLOCK = 256
+
+
+def _quantize_blockwise(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (flat, padded to BLOCK) -> (int8 codes, f32 per-block scales)."""
+    xb = x.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _dequantize_blockwise(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return (codes.astype(jnp.float32) * scale).reshape(-1)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8 all-gather + local reduce, semantically a psum over axis_name.
+
+    Call inside shard_map. Wire bytes: N int8 vs 2N bf16 for ring AR."""
+    n = x.size
+    pad = (-n) % BLOCK
+    flat = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad))
+    codes, scale = _quantize_blockwise(flat)
+    all_codes = jax.lax.all_gather(codes, axis_name)      # (k, n/B, B) int8
+    all_scale = jax.lax.all_gather(scale, axis_name)
+    summed = jnp.sum(all_codes.astype(jnp.float32) * all_scale, axis=0)
+    return summed.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+def compressed_grad_allreduce(grads: Any, mesh: Mesh,
+                              axis_names: tuple[str, ...] = ("pod", "data"),
+                              error_feedback: Any = None) -> tuple[Any, Any]:
+    """All-reduce a gradient pytree with int8 compression + error feedback.
+
+    grads are assumed replicated over `axis_names` *within* the shard_map
+    (i.e. per-device microbatch grads). Returns (mean grads, new residuals).
+    """
+    names = tuple(a for a in axis_names if a in mesh.shape)
+    k = 1
+    for a in names:
+        k *= mesh.shape[a]
+    if error_feedback is None:
+        error_feedback = jax.tree_util.tree_map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, ef):
+        target = g.astype(jnp.float32) + ef
+        n = target.size
+        pad = (-n) % BLOCK
+        flat = jnp.pad(target.reshape(-1), (0, pad))
+        codes, scale = _quantize_blockwise(flat)
+        sent = _dequantize_blockwise(codes, scale)[:n].reshape(g.shape)
+        new_ef = target - sent
+        return sent, new_ef
+
+    pairs = jax.tree_util.tree_map(one, grads, error_feedback)
+    sent = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+
+    def reduce_fn(gs):
+        def red(g):
+            for a in names:
+                g = compressed_psum(g, a)
+            return g
+
+        return jax.tree_util.tree_map(red, gs)
+
+    specs = jax.tree_util.tree_map(lambda _: P(), sent)
+    reduced = shard_map(reduce_fn, mesh=mesh, in_specs=(specs,),
+                        out_specs=specs, check_vma=False)(sent)
+    mean = jax.tree_util.tree_map(lambda g: g / k, reduced)
+    return mean, new_ef
+
+
+def moe_ep_constraints(mesh: Mesh):
+    """Sharding constraints for the MoE all-to-all path: annotating the
+    dispatched activations (E, C, D) with E -> 'model' makes GSPMD lower the
+    dispatch/combine einsums to all-to-all over the model axis instead of
+    all-gathering the full token buffer (the §Perf MoE hillclimb lever)."""
+    from repro.distributed.sharding import constrain
+
+    def fn(xe):
+        return constrain(xe, mesh, P("model", None, None))
+
+    return fn

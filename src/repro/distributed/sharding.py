@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Every parameter carries a tuple of logical axis names (emitted by the model
+init alongside the pytree). This module maps logical axes -> mesh axes,
+checking divisibility and falling back to replication (recorded, never
+silent) when a dim does not divide.
+
+Default layout on the production mesh (pod, data, model):
+  batch          -> (pod, data)        DP across pods and the data axis
+  vocab*, heads, mlp, experts, ...     TP/EP on `model`
+  embed          -> (pod, data) iff fsdp=True   (FSDP: params + opt state
+                    sharded over the data axes; mandatory for >=100B archs)
+  seq            -> (pod, data) for long-context decode (SP)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "vocab": "model",
+    "vocab_out": "model",
+    "embed": None,               # -> ("pod", "data") when fsdp
+    "q_heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "experts_router": "model",
+    "expert_mlp": None,
+    "mamba_inner": "model",
+    "mamba_inner2": "model",
+    "mamba_state": None,
+    "mamba_lowrank": None,
+    "mamba_lowrank_dt": None,
+    "rwkv_heads": "model",
+    "rwkv_ffn": "model",
+    "lora": None,
+    "layers": None,
+    "conv_k": None,
+    "codebooks": None,
+    "mix5": None,
+    "mix2": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Mesh
+    rules: dict[str, Any]
+    fallbacks: list[tuple[str, str, int]]  # (param, axis, dim) replicated
+
+    def spec_for(self, name: str, logical: tuple[str, ...],
+                 shape: tuple[int, ...]) -> P:
+        parts = []
+        used = set()
+        for ax_name, dim in zip(logical, shape):
+            mesh_ax = self.rules.get(ax_name)
+            if mesh_ax is None:
+                parts.append(None)
+                continue
+            axes = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+            axes = tuple(a for a in axes if a in self.mesh.shape)
+            size = int(np.prod([self.mesh.shape[a] for a in axes])) if axes \
+                else 1
+            if size <= 1 or dim % size != 0 or any(a in used for a in axes):
+                if size > 1:
+                    self.fallbacks.append((name, ax_name, dim))
+                parts.append(None)
+                continue
+            used.update(axes)
+            parts.append(axes[0] if len(axes) == 1 else axes)
+        return P(*parts)
+
+    def shardings(self, params_axes: dict[str, tuple],
+                  shapes: dict[str, tuple]) -> dict[str, NamedSharding]:
+        return {
+            name: NamedSharding(self.mesh,
+                                self.spec_for(name, ax, shapes[name]))
+            for name, ax in params_axes.items()
+        }
+
+
+def make_plan(mesh: Mesh, *, fsdp: bool = False,
+              overrides: Optional[dict] = None,
+              mode: str = "tp") -> ShardingPlan:
+    """mode:
+      'tp'   — the baseline layout: DP over (pod, data), TP/EP on `model`
+               (+ FSDP over the DP axes when fsdp=True).
+      'zero' — pure data parallelism with ZeRO param sharding: batch over
+               EVERY mesh axis, params/grads/opt-state sharded over
+               (data, model) on their embed/vocab axis, no tensor
+               parallelism. The right regime for <=15B dense models where
+               TP-16 activation all-reduces dominate the roofline (§Perf).
+    """
+    rules = dict(DEFAULT_RULES)
+    overrides = dict(overrides or {})
+    # per-arch knobs that are not axis rules
+    overrides.pop("base_optimizer", None)
+    if overrides.pop("fsdp", False):
+        fsdp = True
+    mode = overrides.pop("mode", mode)
+    if "experts_axis" in overrides:
+        rules["experts"] = overrides.pop("experts_axis")
+    if "expert_mlp_axis" in overrides:
+        rules["expert_mlp"] = overrides.pop("expert_mlp_axis")
+    rules.update(overrides)
+    if mode == "zero":
+        all_axes = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.shape)
+        zero_axes = tuple(a for a in ("data", "model") if a in mesh.shape)
+        for k in rules:
+            rules[k] = None
+        rules["batch"] = all_axes
+        rules["embed"] = zero_axes
+        rules["vocab"] = zero_axes
+        rules["vocab_out"] = None
+    elif fsdp:
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        rules["embed"] = dp_axes
+    rules.setdefault("batch", ("pod", "data"))
+    return ShardingPlan(mesh=mesh, rules=rules, fallbacks=[])
+
+
+def batch_spec(mesh: Mesh, *, shard_seq: bool = False,
+               mode: str = "tp") -> P:
+    axes = ("pod", "data") if mode != "zero" else ("pod", "data", "model")
+    dp = tuple(a for a in axes if a in mesh.shape)
+    dp = dp[0] if len(dp) == 1 else dp
+    if shard_seq:
+        return P(None, dp)      # (batch, seq): SP for long-context
+    return P(dp)
+
+
+def constrain(x: jax.Array, mesh: Mesh, spec: P) -> jax.Array:
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,67 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`fake_quant_op` exposes the fused kernel with the same custom-VJP contract as
+`repro.core.quant.fake_quant`; models select the backend via
+`use_pallas=True` (TPU) — on CPU CI we run interpret mode, selected here by
+platform sniffing so the public API is backend-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fake_quant as _fq
+from repro.kernels import masked_matmul as _mm
+from repro.kernels import quant_matmul as _qm
+from repro.kernels import ref as _ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------- fake quant
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def fake_quant_op(x, d, q_m, t, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fq.fake_quant_fwd_pallas(x, d, q_m, t, interpret=interpret)
+
+
+def _fq_fwd(x, d, q_m, t, interpret):
+    interpret = _interpret_default() if interpret is None else interpret
+    y = _fq.fake_quant_fwd_pallas(x, d, q_m, t, interpret=interpret)
+    return y, (x, d, q_m, t)
+
+
+def _fq_bwd(interpret, res, g):
+    x, d, q_m, t = res
+    interpret = _interpret_default() if interpret is None else interpret
+    dx, dd, dqm, dt = _fq.fake_quant_bwd_pallas(x, d, q_m, t, g,
+                                                interpret=interpret)
+    return (dx, dd.reshape(jnp.shape(d)).astype(jnp.float32),
+            dqm.reshape(jnp.shape(q_m)).astype(jnp.float32),
+            dt.reshape(jnp.shape(t)).astype(jnp.float32))
+
+
+fake_quant_op.defvjp(_fq_fwd, _fq_bwd)
+
+
+# ------------------------------------------------------------- masked matmul
+def masked_matmul_op(x, w, mask, *, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _mm.masked_matmul_pallas(x, w, mask, interpret=interpret)
+
+
+# -------------------------------------------------------------- quant matmul
+def quant_matmul_op(x, codes, scale, *, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _qm.quant_matmul_pallas(x, codes, scale, interpret=interpret)
+
+
+# Re-export oracles for tests/benchmarks.
+fake_quant_fwd_ref = _ref.fake_quant_fwd_ref
+fake_quant_bwd_ref = _ref.fake_quant_bwd_ref
+masked_matmul_ref = _ref.masked_matmul_ref
+quant_matmul_ref = _ref.quant_matmul_ref

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the source of truth the kernel tests assert against
+(`assert_allclose(kernel(x), ref(x))` over shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import _EPS, clip_qmt
+
+
+def fake_quant_fwd_ref(x, d, q_m, t):
+    """Eqs (1)-(2): nonlinear clip + symmetric uniform quantize-dequantize."""
+    d32 = jnp.maximum(jnp.asarray(d, jnp.float32), _EPS)
+    qm32 = jnp.asarray(q_m, jnp.float32)
+    t32 = jnp.asarray(t, jnp.float32)
+    sign = jnp.sign(x).astype(jnp.float32)
+    xt = clip_qmt(jnp.abs(x).astype(jnp.float32), qm32, t32)
+    return (d32 * jnp.round(xt / d32) * sign).astype(x.dtype)
+
+
+def fake_quant_bwd_ref(x, d, q_m, t, g):
+    """Eqs (4)-(6) + STE dx. Returns (dx, dd, dq_m, dt) with scalar reductions."""
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    d32 = jnp.maximum(jnp.asarray(d, jnp.float32), _EPS)
+    qm32 = jnp.maximum(jnp.asarray(q_m, jnp.float32), _EPS)
+    t32 = jnp.asarray(t, jnp.float32)
+
+    ax = jnp.abs(x32)
+    sign = jnp.sign(x32)
+    inside = ax <= qm32
+    safe_ax = jnp.maximum(ax, _EPS)
+
+    dx = jnp.where(inside, g32, 0.0).astype(x.dtype)
+
+    v = clip_qmt(ax, qm32, t32) / d32
+    dd = jnp.sum(g32 * sign * (jnp.round(v) - v))
+
+    base = jnp.where(inside, safe_ax, qm32)
+    dt = jnp.sum(g32 * sign * jnp.power(base, t32) * jnp.log(base))
+
+    dqm = jnp.sum(
+        g32 * jnp.where(inside, 0.0, sign * t32 * jnp.power(qm32, t32 - 1.0))
+    )
+    return dx, dd, dqm, dt
+
+
+def masked_matmul_ref(x, w, mask):
+    """y = x @ (w * mask[None, :]) — structured column (group) masking."""
+    w32 = w.astype(jnp.float32) * mask.astype(jnp.float32)[None, :]
+    return (x.astype(jnp.float32) @ w32).astype(x.dtype)
+
+
+def quant_matmul_ref(x, codes, scale):
+    """y = x @ (codes * scale[None, :]) — int8 weights, per-column scales."""
+    w = codes.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

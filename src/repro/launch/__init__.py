@@ -1,0 +1,3 @@
+# Entry points: mesh construction, input specs, train/serve step builders,
+# and the 512-device dry-run (python -m repro.launch.dryrun).
+from repro.launch.mesh import make_host_mesh, make_production_mesh

@@ -1,0 +1,278 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+# ^^ MUST precede every other import (jax locks the device count on first
+# init). Only the dry-run sees 512 placeholder devices; tests/benches that
+# import other modules keep the real 1-CPU view.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, all_cells, get_arch, get_overrides
+from repro.configs.base import CompressionConfig, ModelConfig
+from repro.distributed.sharding import batch_spec, make_plan
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_specs, param_specs
+from repro.launch.train import build_geta, make_geta_train_step
+from repro.models.transformer import LM, layer_plan
+from repro.optim.base import AdamState, get_optimizer
+from repro.roofline import analysis as RA
+
+_DRYRUN_COMP = CompressionConfig(
+    target_sparsity=0.3, bit_lower=4, bit_upper=16, act_quant=False,
+    warmup_steps=100, projection_periods=3, projection_steps=100,
+    pruning_periods=5, pruning_steps=100, cooldown_steps=500)
+
+
+def _attach(sds, sharding):
+    return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sharding)
+
+
+def _rep_tree(tree, mesh):
+    rep = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(lambda s: _attach(s, rep), tree)
+
+
+def _qstate_sds(qasso, state_shapes, param_sh, mesh):
+    """Attach shardings to the QASSO state stand-ins: base-optimizer
+    moments follow their parameters; everything else is replicated."""
+    rep = NamedSharding(mesh, P())
+
+    def like_params(tree):
+        return {k: _attach(v, param_sh[k]) for k, v in tree.items()}
+
+    base = state_shapes.base
+    if isinstance(base, AdamState):
+        base_s = AdamState(_attach(base.count, rep), like_params(base.m),
+                           like_params(base.v))
+    elif isinstance(base, dict):
+        base_s = like_params(base)
+    else:
+        base_s = base
+    return state_shapes._replace(
+        step=_attach(state_shapes.step, rep),
+        base=base_s,
+        redundant={k: _attach(v, rep)
+                   for k, v in state_shapes.redundant.items()},
+        keep_mask={k: _attach(v, rep)
+                   for k, v in state_shapes.keep_mask.items()},
+        gamma=_attach(state_shapes.gamma, rep))
+
+
+def build_cell(arch: str, shape_name: str, mesh, step: str = "geta",
+               depth: Optional[int] = None, microbatches: int = 4,
+               mode: str = "tp", serve_quant: str = "qat",
+               serve_attn: str = "auto"):
+    """Lower one (arch x shape x mesh) cell. Returns (lowered, cfg, meta).
+
+    depth: override n_blocks (roofline depth-1/2 differencing).
+    mode: sharding layout ('tp' baseline | 'zero' pure-DP ZeRO).
+    serve_quant: decode path — 'qat' re-runs the fake-quant chain on every
+    weight per step (the training-parity baseline); 'prequant' serves the
+    frozen x_Q weights directly (construct_subnet output; x_Q is constant
+    post-training, so the per-step pow/round chain is pure waste)."""
+    cfg = get_arch(arch)
+    if depth is not None:
+        plan, _ = layer_plan(cfg)
+        cfg = dataclasses.replace(cfg, n_layers=len(plan) * depth)
+    overrides = get_overrides(arch)
+    base_opt = overrides.get("base_optimizer", "adamw")
+    plan = make_plan(mesh, overrides=dict(overrides), mode=mode)
+    lm = LM(cfg)
+    shape = SHAPES[shape_name]
+    p_sds, p_sh, _ = param_specs(lm, mesh, plan)
+    # pin the residual-stream sharding (batch over the DP axes); for
+    # batch=1 long-context cells shard the sequence instead (SP);
+    # pin fake-quantized weights to their param shardings (see LM docs)
+    if shape.global_batch == 1:
+        lm.act_sharding = NamedSharding(
+            mesh, P(None, batch_spec(mesh, mode=mode)[0]))
+    else:
+        lm.act_sharding = NamedSharding(mesh, batch_spec(mesh, mode=mode))
+    lm.param_shardings = p_sh
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        b_sds = batch_specs(cfg, shape, mesh, mode=mode)
+        if step == "geta":
+            qadg, qasso = build_geta(lm, _DRYRUN_COMP, lr=3e-4,
+                                     base_optimizer=base_opt)
+            q_shapes = jax.eval_shape(
+                lambda p: lm.init_qparams(p, bits_init=8.0), p_sds)
+            q_sds = _rep_tree(q_shapes, mesh)
+            s_shapes = jax.eval_shape(qasso.init, p_sds, q_sds)
+            s_sds = _qstate_sds(qasso, s_shapes, p_sh, mesh)
+            mb_sh = NamedSharding(mesh, batch_spec(mesh, mode=mode))
+            g_sh = ({k: p_sh[k] for k in p_sh},
+                    jax.tree_util.tree_map(lambda _: rep, q_shapes))
+            fn = make_geta_train_step(lm, qasso, microbatches=microbatches,
+                                      mb_sharding=mb_sh, grad_shardings=g_sh)
+            lowered = jax.jit(fn).lower(p_sds, q_sds, s_sds, b_sds)
+        else:
+            opt = get_optimizer(base_opt)
+            o_shapes = jax.eval_shape(opt.init, p_sds)
+            if isinstance(o_shapes, AdamState):
+                o_sds = AdamState(
+                    _attach(o_shapes.count, rep),
+                    {k: _attach(v, p_sh[k]) for k, v in o_shapes.m.items()},
+                    {k: _attach(v, p_sh[k]) for k, v in o_shapes.v.items()})
+            elif isinstance(o_shapes, dict):
+                o_sds = {k: _attach(v, p_sh[k])
+                         for k, v in o_shapes.items()}
+            else:
+                o_sds = o_shapes
+
+            from repro.launch.train import _accumulate_grads
+
+            def fn(params, opt_state, batch):
+                def lg(b):
+                    return jax.value_and_grad(
+                        lambda p: lm.loss(p, None, b))(params)
+
+                if microbatches <= 1:
+                    loss, gx = lg(batch)
+                else:
+                    loss, gx = _accumulate_grads(
+                        lg, batch, microbatches, params,
+                        mb_sharding=NamedSharding(
+                            mesh, batch_spec(mesh, mode=mode)),
+                        grad_shardings={k: p_sh[k] for k in p_sh})
+                delta, opt_state = opt.update(gx, opt_state, params,
+                                              jnp.float32(3e-4))
+                new_p = jax.tree_util.tree_map(jnp.add, params, delta)
+                return new_p, opt_state, loss
+
+            lowered = jax.jit(fn).lower(p_sds, o_sds, b_sds)
+    elif shape.kind == "prefill":
+        b_sds = batch_specs(cfg, shape, mesh)
+        q_shapes = jax.eval_shape(
+            lambda p: lm.init_qparams(p, bits_init=8.0), p_sds)
+        q_sds = _rep_tree(q_shapes, mesh)
+
+        def fwd(params, qparams, batch):
+            return lm.forward(params, qparams, batch["tokens"],
+                              batch.get("vision_embeds"))
+
+        lowered = jax.jit(fwd).lower(p_sds, q_sds, b_sds)
+    else:  # decode
+        from repro.models import layers as Lyr
+        if serve_attn == "psum":  # (seqshard handled via decode_specs)
+            # pin score sharding: contract d_head locally, psum partials
+            dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            Lyr.DECODE_SCORE_SHARDING = NamedSharding(
+                mesh, P(dp_axes if shape.global_batch > 1 else None))
+        else:
+            Lyr.DECODE_SCORE_SHARDING = None
+        d = decode_specs(cfg, shape, mesh,
+                         cache_layout=("seq" if serve_attn == "seqshard"
+                                       else "heads"))
+        if serve_quant == "prequant":
+            def serve(params, caches, token, pos):
+                return lm.decode_step(params, None, caches, token, pos)
+
+            lowered = jax.jit(serve).lower(p_sds, d["caches"],
+                                           d["token"], d["pos"])
+        else:
+            q_shapes = jax.eval_shape(
+                lambda p: lm.init_qparams(p, bits_init=8.0), p_sds)
+            q_sds = _rep_tree(q_shapes, mesh)
+
+            def serve(params, qparams, caches, token, pos):
+                return lm.decode_step(params, qparams, caches, token, pos)
+
+            lowered = jax.jit(serve).lower(p_sds, q_sds, d["caches"],
+                                           d["token"], d["pos"])
+    return lowered, cfg, {"plan_fallbacks": plan.fallbacks, "step": step}
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             step: str = "geta", microbatches: int = 4,
+             verbose: bool = True) -> dict:
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "step": step, "microbatches": microbatches}
+    try:
+        lowered, cfg, meta = build_cell(arch, shape_name, mesh, step,
+                                        microbatches=microbatches)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        cost = RA.cost_from_compiled(compiled)
+        rec.update(
+            ok=True, lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            arg_gb=ma.argument_size_in_bytes / 1e9,
+            temp_gb=ma.temp_size_in_bytes / 1e9,
+            out_gb=ma.output_size_in_bytes / 1e9,
+            flops_per_dev=cost.flops,
+            bytes_per_dev=cost.bytes_accessed,
+            wire_bytes_per_dev=cost.wire_bytes,
+            collectives=cost.coll_counts,
+            fallbacks=[f"{p}:{a}" for p, a, _ in meta["plan_fallbacks"]],
+        )
+        if verbose:
+            print(f"[ok]   {arch:26s} {shape_name:12s} {mesh_name:6s} "
+                  f"{step:5s} compile={t_compile:6.1f}s "
+                  f"dev_mem={(ma.argument_size_in_bytes + ma.temp_size_in_bytes)/1e9:7.2f}GB "
+                  f"flops/dev={cost.flops:.3e} wire/dev={cost.wire_bytes:.3e}")
+            print(f"       memory_analysis: args={ma.argument_size_in_bytes} "
+                  f"temp={ma.temp_size_in_bytes} out={ma.output_size_in_bytes}")
+            print(f"       cost_analysis: flops={cost.flops} "
+                  f"bytes={cost.bytes_accessed} colls={cost.coll_counts}")
+    except Exception as e:  # a failing cell is a bug in the system
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {arch:26s} {shape_name:12s} {mesh_name:6s}: {e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--step", default="geta", choices=["geta", "base"])
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    args = ap.parse_args()
+
+    cells = all_cells()
+    if args.arch != "all":
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape != "all":
+        cells = [c for c in cells if c[1] == args.shape]
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("1pod", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2pod", make_production_mesh(multi_pod=True)))
+
+    records = []
+    for mesh_name, mesh in meshes:
+        for arch, shape in cells:
+            records.append(run_cell(arch, shape, mesh, mesh_name, args.step,
+                                    microbatches=args.microbatches))
+
+    n_ok = sum(r["ok"] for r in records)
+    print(f"\n{n_ok}/{len(records)} cells compiled")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1, default=str)
+    print(f"wrote {args.out}")
+    if n_ok < len(records):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

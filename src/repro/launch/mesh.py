@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches JAX
+device state, so tests/benches keep their 1-CPU view and only dryrun.py
+(which sets XLA_FLAGS first) sees 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist (CPU smoke/tests): a 1D data mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,3 @@
+from repro.models.bert import BertEncoder
+from repro.models.cnn import CNN, RESNET20, RESNET56, VGG7, CNNSpec
+from repro.models.transformer import LM, layer_plan

@@ -1,0 +1,205 @@
+"""BERT-style encoder (per-layer, unstacked) — Table 3's substrate.
+
+Full-fidelity GETA path for transformers: per-layer quant sites, per-layer
+attention-head and MLP-channel pruning families (the QADG appendix-D graph).
+Used for the joint-vs-(prune-then-PTQ) comparison on a synthetic QA task.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bops import LayerMacs
+from repro.core.graph import FamilySpec, GraphBuilder
+from repro.core.quant import fake_quant, init_quant_params
+from repro.models.layers import attention_dense
+
+
+def _qw(params, qparams, name):
+    w = params[name]
+    site = name + ".wq"
+    if qparams is not None and site in qparams:
+        qp = qparams[site]
+        w = fake_quant(w, qp.d, qp.q_m, qp.t)
+    return w
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(
+        x.dtype)
+
+
+class BertEncoder:
+    def __init__(self, n_layers=4, d_model=256, n_heads=4, d_ff=1024,
+                 vocab=8192, max_seq=512):
+        self.L = n_layers
+        self.D = d_model
+        self.H = n_heads
+        self.dh = d_model // n_heads
+        self.F = d_ff
+        self.V = vocab
+        self.S = max_seq
+
+    def init(self, key):
+        D, F, V = self.D, self.F, self.V
+        p = {}
+        ks = iter(jax.random.split(key, 8 * self.L + 8))
+        p["embed"] = jax.random.normal(next(ks), (V, D)) * 0.02
+        p["pos_embed"] = jax.random.normal(next(ks), (self.S, D)) * 0.02
+        for i in range(self.L):
+            pre = f"enc.{i}"
+            std = D ** -0.5
+            for nm, shape in [("wq", (D, D)), ("wk", (D, D)), ("wv", (D, D)),
+                              ("wo", (D, D))]:
+                p[f"{pre}.attn.{nm}"] = jax.random.normal(next(ks), shape) * std
+            p[f"{pre}.attn.bq"] = jnp.zeros((D,))
+            p[f"{pre}.attn.bk"] = jnp.zeros((D,))
+            p[f"{pre}.attn.bv"] = jnp.zeros((D,))
+            p[f"{pre}.ln1.scale"] = jnp.ones((D,))
+            p[f"{pre}.ln1.bias"] = jnp.zeros((D,))
+            p[f"{pre}.mlp.w1"] = jax.random.normal(next(ks), (D, F)) * std
+            p[f"{pre}.mlp.b1"] = jnp.zeros((F,))
+            p[f"{pre}.mlp.w2"] = jax.random.normal(next(ks), (F, D)) * F ** -0.5
+            p[f"{pre}.mlp.b2"] = jnp.zeros((D,))
+            p[f"{pre}.ln2.scale"] = jnp.ones((D,))
+            p[f"{pre}.ln2.bias"] = jnp.zeros((D,))
+        p["qa_head.w"] = jax.random.normal(next(ks), (D, 2)) * D ** -0.5
+        p["qa_head.b"] = jnp.zeros((2,))
+        return p
+
+    def apply(self, params, qparams, tokens):
+        S = tokens.shape[1]
+        x = params["embed"][tokens] + params["pos_embed"][:S]
+        for i in range(self.L):
+            pre = f"enc.{i}"
+            q = x @ _qw(params, qparams, f"{pre}.attn.wq") \
+                + params[f"{pre}.attn.bq"]
+            k = x @ _qw(params, qparams, f"{pre}.attn.wk") \
+                + params[f"{pre}.attn.bk"]
+            v = x @ _qw(params, qparams, f"{pre}.attn.wv") \
+                + params[f"{pre}.attn.bv"]
+            B = x.shape[0]
+            q = q.reshape(B, S, self.H, self.dh)
+            k = k.reshape(B, S, self.H, self.dh)
+            v = v.reshape(B, S, self.H, self.dh)
+            a = attention_dense(q, k, v, causal=False)
+            a = a.reshape(B, S, self.D)
+            x = layernorm(x + a @ _qw(params, qparams, f"{pre}.attn.wo"),
+                          params[f"{pre}.ln1.scale"],
+                          params[f"{pre}.ln1.bias"])
+            h = jax.nn.gelu(x @ _qw(params, qparams, f"{pre}.mlp.w1")
+                            + params[f"{pre}.mlp.b1"])
+            h = h @ _qw(params, qparams, f"{pre}.mlp.w2") \
+                + params[f"{pre}.mlp.b2"]
+            x = layernorm(x + h, params[f"{pre}.ln2.scale"],
+                          params[f"{pre}.ln2.bias"])
+        return x @ _qw(params, qparams, "qa_head.w") + params["qa_head.b"]
+
+    def loss(self, params, qparams, batch):
+        """SQuAD-style span loss: predict start/end positions."""
+        logits = self.apply(params, qparams, batch["tokens"])  # (B, S, 2)
+        logits = logits.astype(jnp.float32)
+        out = 0.0
+        for j, key in enumerate(("start", "end")):
+            lj = logits[..., j]
+            logz = jax.nn.logsumexp(lj, axis=-1)
+            gold = jnp.take_along_axis(lj, batch[key][:, None], axis=-1)[:, 0]
+            out += jnp.mean(logz - gold)
+        return out / 2.0
+
+    def exact_match(self, params, qparams, batch):
+        logits = self.apply(params, qparams, batch["tokens"])
+        s = jnp.argmax(logits[..., 0], -1)
+        e = jnp.argmax(logits[..., 1], -1)
+        return jnp.mean(jnp.logical_and(s == batch["start"],
+                                        e == batch["end"]))
+
+    # ------------------------------------------------------------- graph
+    def build_graph(self, act_quant: bool = False) -> GraphBuilder:
+        gb = GraphBuilder()
+        gb.input("in")
+        gb.embedding("embed", "embed", out_dim=self.D, non_prunable=True)
+        resid = "embed"
+        for i in range(self.L):
+            pre = f"enc.{i}"
+            members = [(f"{pre}.attn.wq", 1, self.dh),
+                       (f"{pre}.attn.wk", 1, self.dh),
+                       (f"{pre}.attn.wv", 1, self.dh),
+                       (f"{pre}.attn.bq", 0, self.dh),
+                       (f"{pre}.attn.bk", 0, self.dh),
+                       (f"{pre}.attn.bv", 0, self.dh),
+                       (f"{pre}.attn.wo", 0, self.dh)]
+            spec = FamilySpec(name=f"{pre}.attn.heads", units=self.H,
+                              members=members, kind="head_group")
+            attn = gb.composite(
+                f"{pre}.attn", "attention", spec,
+                params={f"p{j}": m[0] for j, m in enumerate(members)},
+                in_members=[(f"{pre}.attn.wq", 0), (f"{pre}.attn.wk", 0),
+                            (f"{pre}.attn.wv", 0)],
+                resid_members=[(f"{pre}.attn.wo", 1)],
+                after=resid)
+            for w in ("wq", "wk", "wv", "wo"):
+                gb.attach_weight_quant(attn, f"{pre}.attn.{w}.wq",
+                                       target_param=f"{pre}.attn.{w}")
+            a1 = gb.add(f"{pre}.add1", [resid, attn])
+            gb.norm(f"{pre}.ln1", scale=f"{pre}.ln1.scale",
+                    bias=f"{pre}.ln1.bias", after=a1)
+            fc1 = gb.linear(f"{pre}.mlp.fc1", f"{pre}.mlp.w1",
+                            bias=f"{pre}.mlp.b1", out_dim=self.F,
+                            after=f"{pre}.ln1")
+            gb.attach_weight_quant(fc1, f"{pre}.mlp.w1.wq")
+            act = gb.act(f"{pre}.mlp.gelu")
+            fc2 = gb.linear(f"{pre}.mlp.fc2", f"{pre}.mlp.w2",
+                            bias=f"{pre}.mlp.b2", out_dim=self.D,
+                            non_prunable=True, after=act)
+            if act_quant:
+                gb.insert_act_quant(act, fc2, f"{pre}.mlp.gelu.aq")
+            gb.attach_weight_quant(fc2, f"{pre}.mlp.w2.wq")
+            a2 = gb.add(f"{pre}.add2", [f"{pre}.ln1", fc2])
+            gb.norm(f"{pre}.ln2", scale=f"{pre}.ln2.scale",
+                    bias=f"{pre}.ln2.bias", after=a2)
+            resid = f"{pre}.ln2"
+        head = gb.linear("qa_head", "qa_head.w", bias="qa_head.b",
+                         out_dim=2, non_prunable=True, after=resid)
+        gb.attach_weight_quant(head, "qa_head.w.wq")
+        gb.output("out")
+        return gb
+
+    def quant_weight_names(self):
+        names = []
+        for i in range(self.L):
+            pre = f"enc.{i}"
+            names += [f"{pre}.attn.{w}" for w in ("wq", "wk", "wv", "wo")]
+            names += [f"{pre}.mlp.w1", f"{pre}.mlp.w2"]
+        names.append("qa_head.w")
+        return names
+
+    def init_qparams(self, params, bits_init=8.0, act_quant=False):
+        qp = {}
+        for name in self.quant_weight_names():
+            qp[name + ".wq"] = init_quant_params(params[name], bits=bits_init)
+        if act_quant:
+            for i in range(self.L):
+                qp[f"enc.{i}.mlp.gelu.aq"] = init_quant_params(
+                    q_m=4.0, bits=bits_init)
+        return qp
+
+    def layer_macs(self, batch: int, seq: int) -> list[LayerMacs]:
+        out = []
+        toks = float(batch * seq)
+        for i in range(self.L):
+            pre = f"enc.{i}"
+            for w in ("wq", "wk", "wv", "wo"):
+                out.append(LayerMacs(f"{pre}.attn", toks * self.D * self.D,
+                                     f"{pre}.attn.{w}"))
+            out.append(LayerMacs(f"{pre}.mlp.fc1", toks * self.D * self.F,
+                                 f"{pre}.mlp.w1"))
+            out.append(LayerMacs(f"{pre}.mlp.fc2", toks * self.F * self.D,
+                                 f"{pre}.mlp.w2"))
+        out.append(LayerMacs("qa_head", toks * self.D * 2, "qa_head.w"))
+        return out

@@ -1,0 +1,674 @@
+"""Composable model layers (pure functions over a flat param dict).
+
+Conventions:
+- params: flat dict[str, jax.Array]; stacked layer tensors carry a leading
+  (L,) axis and are consumed by lax.scan over the layer stack.
+- qparams: dict[str, QuantParams]; weight sites are applied with
+  `qw(params, qparams, name)` — fake-quant if a site exists, pass-through
+  otherwise (so the same model code serves QAT and vanilla training).
+- activations in cfg.dtype (bf16 default); softmax/norm/SSM state in f32.
+- every init_* returns (params, axes) where axes maps each param to a tuple
+  of *logical* axis names consumed by repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quant import QuantParams, fake_quant
+
+Dtype = Any
+
+# Optional NamedSharding for decode attention scores (B, KV, g, 1, S).
+# When the KV cache is d_head-sharded (GQA kv-heads don't divide the model
+# axis), XLA's default strategy re-gathers the whole cache per step
+# ('involuntary full rematerialization'); pinning the score sharding makes
+# it contract d_head locally and psum the (small) partial scores instead.
+# Set by launch/dryrun (serve_attn='psum'); None = compiler's choice.
+DECODE_SCORE_SHARDING = None
+
+
+def _dt(cfg: ModelConfig) -> Dtype:
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def qw(params: dict, qparams: Optional[dict], name: str) -> jax.Array:
+    """Weight fetch through the (optional) parameterized quantizer."""
+    w = params[name]
+    site = name + ".wq"
+    if qparams is not None and site in qparams:
+        qp: QuantParams = qparams[site]
+        w = fake_quant(w, qp.d, qp.q_m, qp.t)
+    return w
+
+
+def qa(x: jax.Array, qparams: Optional[dict], site: str) -> jax.Array:
+    """Activation pass through the (optional) parameterized quantizer."""
+    if qparams is not None and site in qparams:
+        qp: QuantParams = qparams[site]
+        x = fake_quant(x, qp.d, qp.q_m, qp.t)
+    return x
+
+
+# ------------------------------------------------------------------ norms
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def groupnorm_heads(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                    n_heads: int, eps: float = 1e-5) -> jax.Array:
+    """Per-head groupnorm (RWKV ln_x). x: (..., H*dh)."""
+    shp = x.shape
+    x32 = x.astype(jnp.float32).reshape(*shp[:-1], n_heads, -1)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(shp)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rope
+def rope_tables(seq_len: int, d_head: int, theta: float,
+                offset: int = 0) -> tuple[jax.Array, jax.Array]:
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)
+    freqs = theta ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, dh); cos/sin: (S, dh/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+def _causal_mask(sq: int, sk: int, q_off: int, window: int) -> jax.Array:
+    qi = jnp.arange(sq)[:, None] + q_off
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window > 0:
+        m = jnp.logical_and(m, ki > qi - window)
+    return m
+
+
+def attention_dense(q, k, v, *, window: int = 0, q_offset: int = 0,
+                    causal: bool = True):
+    """Full materialized attention (exact; used when S is modest).
+
+    q: (B, Sq, H, dh); k/v: (B, Sk, KV, dh) — GQA handled by reshape.
+    """
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qh = q.reshape(B, Sq, KV, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(dh)
+    if causal:
+        mask = _causal_mask(Sq, k.shape[1], q_offset, window)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def attention_blockwise(q, k, v, *, block: int = 1024, window: int = 0):
+    """Flash-style online-softmax attention (never materializes S x S).
+
+    Outer scan over query blocks; inner scan over KV blocks with running
+    (max, denom, acc). Exact (same math as attention_dense).
+
+    Both loop bodies are jax.checkpoint'ed so the backward pass *recomputes*
+    the block scores instead of saving them — without this, the scan VJPs
+    persist every (q-block x kv-block) score tile simultaneously during the
+    layer backward (measured +17 GB/device at 4k seq on internlm2-1.8b).
+    """
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    nb = S // block
+    assert S % block == 0, (S, block)
+    qb = q.reshape(B, nb, block, KV, g, dh)
+    kb = k.reshape(B, nb, block, KV, dh)
+    vb = v.reshape(B, nb, block, KV, dh)
+
+    def q_block(qi, q_i):
+        # q_i: (B, block, KV, g, dh)
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_j, v_j = inp
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_i.astype(jnp.float32),
+                           k_j.astype(jnp.float32)) / math.sqrt(dh)
+            mask = _causal_mask(block, block, (qi - ki) * block, window)
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, v_j.astype(jnp.float32))
+            # skip fully-masked future blocks (they contribute zeros anyway,
+            # masked by -1e30 -> exp ~ 0)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, g, block), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, g, block), jnp.float32)
+        a0 = jnp.zeros((B, KV, g, block, dh), jnp.float32)
+        ks = jnp.arange(nb)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (ks, jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 3, 1)  # (B, block, KV, g, dh)
+
+    outs = jax.lax.map(jax.checkpoint(lambda args: q_block(*args)),
+                       (jnp.arange(nb), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, dh)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, cfg: ModelConfig, *, window: int = 0,
+              q_offset: int = 0):
+    S = q.shape[1]
+    if S > cfg.attn_block_threshold and S % cfg.attn_block_size == 0 \
+            and q.shape[1] == k.shape[1]:
+        return attention_blockwise(q, k, v, block=cfg.attn_block_size,
+                                   window=window)
+    return attention_dense(q, k, v, window=window, q_offset=q_offset)
+
+
+# --------------------------------------------------------- attention block
+def init_attention(key, cfg: ModelConfig, prefix: str, n_layers: int,
+                   dtype) -> tuple[dict, dict]:
+    D, Q, KVd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = D ** -0.5
+    L = (n_layers,) if n_layers else ()
+    lax_ = ("layers",) if n_layers else ()
+    p = {
+        f"{prefix}.wq": jax.random.normal(k1, L + (D, Q), dtype) * std,
+        f"{prefix}.wk": jax.random.normal(k2, L + (D, KVd), dtype) * std,
+        f"{prefix}.wv": jax.random.normal(k3, L + (D, KVd), dtype) * std,
+        f"{prefix}.wo": jax.random.normal(k4, L + (Q, D), dtype) * std,
+    }
+    axes = {
+        f"{prefix}.wq": lax_ + ("embed", "q_heads"),
+        f"{prefix}.wk": lax_ + ("embed", "kv_heads"),
+        f"{prefix}.wv": lax_ + ("embed", "kv_heads"),
+        f"{prefix}.wo": lax_ + ("q_heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        p[f"{prefix}.bq"] = jnp.zeros(L + (Q,), dtype)
+        p[f"{prefix}.bk"] = jnp.zeros(L + (KVd,), dtype)
+        p[f"{prefix}.bv"] = jnp.zeros(L + (KVd,), dtype)
+        axes[f"{prefix}.bq"] = lax_ + ("q_heads",)
+        axes[f"{prefix}.bk"] = lax_ + ("kv_heads",)
+        axes[f"{prefix}.bv"] = lax_ + ("kv_heads",)
+    return p, axes
+
+
+def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
+               rope: tuple, window: int = 0, prefix: str,
+               cache: Optional[tuple] = None, q_offset: int = 0):
+    """lp: per-layer (unstacked) params view. cache: (k_cache, v_cache,
+    write_pos) for decode. Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H, KVh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ qw(lp, qp, f"{prefix}.wq")
+    k = x @ qw(lp, qp, f"{prefix}.wk")
+    v = x @ qw(lp, qp, f"{prefix}.wv")
+    if cfg.qkv_bias:
+        q = q + lp[f"{prefix}.bq"]
+        k = k + lp[f"{prefix}.bk"]
+        v = v + lp[f"{prefix}.bv"]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, KVh, dh)
+    v = v.reshape(B, S, KVh, dh)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv, pos = cache
+        # decode: append the new token at `pos` (ring for windowed layers)
+        slot = jnp.mod(pos, ck.shape[1]) if window > 0 else pos
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, slot, 0, 0))
+        valid = jnp.arange(ck.shape[1]) <= (pos if window <= 0
+                                            else ck.shape[1] + 10**9)
+        k_all, v_all = ck, cv
+        # attention of the single query over the cache
+        g = H // KVh
+        qh = q.reshape(B, 1, KVh, g, dh)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32),
+                            k_all.astype(jnp.float32)) / math.sqrt(dh)
+        if DECODE_SCORE_SHARDING is not None:
+            scores = jax.lax.with_sharding_constraint(
+                scores, DECODE_SCORE_SHARDING)
+        if window <= 0:
+            scores = jnp.where(valid[None, None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs,
+                         v_all.astype(jnp.float32))
+        out = out.reshape(B, 1, H, dh).astype(x.dtype)
+        new_cache = (ck, cv, pos + 1)
+    else:
+        out = attention(q, k, v, cfg, window=window, q_offset=q_offset)
+    out = out.reshape(B, S, H * dh)
+    out = qa(out, qp, f"{prefix}.attn_out.aq")
+    return out @ qw(lp, qp, f"{prefix}.wo"), new_cache
+
+
+# -------------------------------------------------------------------- mlp
+def init_mlp(key, cfg: ModelConfig, prefix: str, n_layers: int, dtype,
+             d_ff: Optional[int] = None) -> tuple[dict, dict]:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    L = (n_layers,) if n_layers else ()
+    lax_ = ("layers",) if n_layers else ()
+    p = {
+        f"{prefix}.w_gate": jax.random.normal(k1, L + (D, F), dtype) * D ** -0.5,
+        f"{prefix}.w_up": jax.random.normal(k2, L + (D, F), dtype) * D ** -0.5,
+        f"{prefix}.w_down": jax.random.normal(k3, L + (F, D), dtype) * F ** -0.5,
+    }
+    axes = {
+        f"{prefix}.w_gate": lax_ + ("embed", "mlp"),
+        f"{prefix}.w_up": lax_ + ("embed", "mlp"),
+        f"{prefix}.w_down": lax_ + ("mlp", "embed"),
+    }
+    return p, axes
+
+
+def mlp_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
+              prefix: str):
+    g = x @ qw(lp, qp, f"{prefix}.w_gate")
+    u = x @ qw(lp, qp, f"{prefix}.w_up")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = qa(h, qp, f"{prefix}.mlp_act.aq")
+    return h @ qw(lp, qp, f"{prefix}.w_down")
+
+
+# -------------------------------------------------------------------- moe
+def init_moe(key, cfg: ModelConfig, prefix: str, n_layers: int, dtype
+             ) -> tuple[dict, dict]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    L = (n_layers,) if n_layers else ()
+    lax_ = ("layers",) if n_layers else ()
+    p = {
+        f"{prefix}.router": jax.random.normal(k1, L + (D, E), dtype) * D ** -0.5,
+        f"{prefix}.we_gate": jax.random.normal(k2, L + (E, D, F), dtype) * D ** -0.5,
+        f"{prefix}.we_up": jax.random.normal(k3, L + (E, D, F), dtype) * D ** -0.5,
+        f"{prefix}.we_down": jax.random.normal(k4, L + (E, F, D), dtype) * F ** -0.5,
+    }
+    axes = {
+        f"{prefix}.router": lax_ + ("embed", "experts_router"),
+        f"{prefix}.we_gate": lax_ + ("experts", "embed", "expert_mlp"),
+        f"{prefix}.we_up": lax_ + ("experts", "embed", "expert_mlp"),
+        f"{prefix}.we_down": lax_ + ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.moe.shared_expert:
+        ps, axs = init_mlp(key, cfg, f"{prefix}.shared", n_layers, dtype)
+        p.update(ps)
+        axes.update(axs)
+    return p, axes
+
+
+def moe_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
+              prefix: str):
+    """Top-k token-choice MoE, GShard-style grouped einsum dispatch.
+
+    Tokens are split into G groups (one per sequence) with *per-group*
+    capacity C = cf * n * k / E; the dispatch one-hot is (G, n, E, C) —
+    linear in tokens. A global-capacity formulation is quadratic in tokens
+    (measured ~1 TB/device temp on jamba train_4k) because C grows with N
+    while the mask still spans all N tokens.
+
+    Sharding: groups ride the batch axes; annotating the dispatched
+    activations with experts -> 'model' (cfg.moe.impl='alltoall') makes
+    GSPMD lower dispatch/combine to all-to-all (the §Perf EP lever).
+    """
+    B, S, D = x.shape
+    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    G, n = B, S
+    xg = x.reshape(G, n, D)
+    logits = (xg @ qw(lp, qp, f"{prefix}.router")).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G, n, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)           # (G, n, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    C = max(int(cfg.moe.capacity_factor * n * K / E), 4)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G, n, K, E)
+    # position of each (token, k) within its expert's per-group queue
+    flat = onehot.reshape(G, n * K, E)
+    pos = jnp.cumsum(flat, axis=1).reshape(G, n, K, E) - 1.0
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (G, n, K)
+    keep = (pos < C).astype(jnp.float32)
+    gate_vals = gate_vals * keep
+
+    posoh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=x.dtype)
+    dispatch = jnp.einsum("gnke,gnkc->gnec", onehot.astype(x.dtype), posoh)
+    combine = jnp.einsum("gnke,gnkc,gnk->gnec", onehot,
+                         posoh.astype(jnp.float32), gate_vals)
+
+    xe = jnp.einsum("gnec,gnd->gecd", dispatch, xg)          # (G, E, C, D)
+    g = jnp.einsum("gecd,edf->gecf", xe, qw(lp, qp, f"{prefix}.we_gate"))
+    u = jnp.einsum("gecd,edf->gecf", xe, qw(lp, qp, f"{prefix}.we_up"))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, qw(lp, qp, f"{prefix}.we_down"))
+    y = jnp.einsum("gnec,gecd->gnd", combine.astype(x.dtype), ye)
+
+    if cfg.moe.shared_expert:
+        y = y + mlp_apply(lp, qp, cfg, x, prefix=f"{prefix}.shared")
+        return y.reshape(B, S, D)
+    return y.reshape(B, S, D)
+
+
+# ------------------------------------------------------------------ mamba
+def init_mamba(key, cfg: ModelConfig, prefix: str, n_layers: int, dtype
+               ) -> tuple[dict, dict]:
+    D = cfg.d_model
+    mc = cfg.mamba
+    Di = mc.expand * D
+    dtr = mc.dt_rank or D // 16
+    N = mc.d_state
+    ks = jax.random.split(key, 6)
+    L = (n_layers,) if n_layers else ()
+    lax_ = ("layers",) if n_layers else ()
+    p = {
+        f"{prefix}.in_proj": jax.random.normal(ks[0], L + (D, 2 * Di), dtype) * D ** -0.5,
+        f"{prefix}.conv_w": jax.random.normal(ks[1], L + (mc.d_conv, Di), dtype) * 0.1,
+        f"{prefix}.x_proj": jax.random.normal(ks[2], L + (Di, dtr + 2 * N), dtype) * Di ** -0.5,
+        f"{prefix}.dt_proj": jax.random.normal(ks[3], L + (dtr, Di), dtype) * dtr ** -0.5,
+        f"{prefix}.dt_bias": jnp.zeros(L + (Di,), dtype),
+        f"{prefix}.A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)),
+            L + (Di, N)).astype(jnp.float32) * 1.0,
+        f"{prefix}.D": jnp.ones(L + (Di,), jnp.float32),
+        f"{prefix}.out_proj": jax.random.normal(ks[4], L + (Di, D), dtype) * Di ** -0.5,
+    }
+    axes = {
+        f"{prefix}.in_proj": lax_ + ("embed", "mamba_inner2"),
+        f"{prefix}.conv_w": lax_ + ("conv_k", "mamba_inner"),
+        f"{prefix}.x_proj": lax_ + ("mamba_inner", "mamba_lowrank"),
+        f"{prefix}.dt_proj": lax_ + ("mamba_lowrank_dt", "mamba_inner"),
+        f"{prefix}.dt_bias": lax_ + ("mamba_inner",),
+        f"{prefix}.A_log": lax_ + ("mamba_inner", "mamba_state"),
+        f"{prefix}.D": lax_ + ("mamba_inner",),
+        f"{prefix}.out_proj": lax_ + ("mamba_inner", "embed"),
+    }
+    return p, axes
+
+
+def _mamba_chunk_scan(xc, dt, Bc, Cc, A, D_vec, h0, chunk=64):
+    """Chunked diagonal selective-SSM scan, memory-safe.
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t ;  y_t = <h_t, C_t>.
+    The (B, S, Di, N) transition tensors are formed *per chunk inside the
+    checkpointed body* (never full-sequence — that costs S/chunk x more
+    HBM), and only y (B, S, Di) leaves the loop.
+
+    xc: (B,S,Di) activations; dt: (B,S,Di) f32; Bc/Cc: (B,S,N);
+    A: (Di,N) f32; D_vec: (Di,) f32; h0: (B,Di,N) f32.
+    Returns (y (B,S,Di) f32, h_last).
+    """
+    B, S, Di = xc.shape
+    N = A.shape[1]
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    nch = S // C
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_step(h, inp):
+        xcc, dtc, bcc, ccc = inp           # (B, C, ...)
+        dA = jnp.exp(dtc[..., None] * A[None, None])          # (B,C,Di,N)
+        dBx = (dtc * xcc.astype(jnp.float32))[..., None] \
+            * bcc.astype(jnp.float32)[:, :, None, :]
+        accA, accB = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        hs = accA * h[:, None] + accB
+        y = jnp.einsum("bcdn,bcn->bcd", hs, ccc.astype(jnp.float32))
+        y = y + D_vec[None, None] * xcc.astype(jnp.float32)
+        return hs[:, -1], y
+
+    def chunked(t):
+        return jnp.moveaxis(t.reshape(B, nch, C, *t.shape[2:]), 1, 0)
+
+    h_last, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step), h0,
+        (chunked(xc), chunked(dt), chunked(Bc), chunked(Cc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, Di)
+    return y, h_last
+
+
+def mamba_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
+                prefix: str, state: Optional[tuple] = None):
+    """Selective SSM block. state = (h (B,Di,N), conv (B,K-1,Di)) for decode.
+    Returns (out, new_state)."""
+    B, S, D = x.shape
+    mc = cfg.mamba
+    Di = mc.expand * D
+    N = mc.d_state
+    Kc = mc.d_conv
+
+    xi = x @ qw(lp, qp, f"{prefix}.in_proj_x")   # (B, S, Di)
+    z = x @ qw(lp, qp, f"{prefix}.in_proj_z")
+
+    conv_w = lp[f"{prefix}.conv_w"].astype(jnp.float32)   # (K, Di)
+    if state is None:
+        pad = jnp.zeros((B, Kc - 1, Di), xi.dtype)
+        xpad = jnp.concatenate([pad, xi], axis=1)
+        new_conv = xpad[:, -(Kc - 1):] if Kc > 1 else pad
+    else:
+        h_prev, conv_prev = state
+        xpad = jnp.concatenate([conv_prev.astype(xi.dtype), xi], axis=1)
+        new_conv = xpad[:, -(Kc - 1):] if Kc > 1 else conv_prev
+    xc = sum(xpad[:, i:i + S].astype(jnp.float32) * conv_w[i]
+             for i in range(Kc))
+    xc = jax.nn.silu(xc).astype(x.dtype)
+
+    proj = xc @ qw(lp, qp, f"{prefix}.x_proj")
+    dtr = (cfg.mamba.dt_rank or D // 16)
+    dt_low, Bc, Cc = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_low @ qw(lp, qp, f"{prefix}.dt_proj")).astype(jnp.float32)
+        + lp[f"{prefix}.dt_bias"].astype(jnp.float32))     # (B, S, Di)
+    A = -jnp.exp(lp[f"{prefix}.A_log"].astype(jnp.float32))  # (Di, N)
+
+    h0 = jnp.zeros((B, Di, N), jnp.float32) if state is None \
+        else state[0]
+    y, h_last = _mamba_chunk_scan(
+        xc, dt, Bc, Cc, A, lp[f"{prefix}.D"].astype(jnp.float32), h0,
+        chunk=mc.chunk)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = qa(y, qp, f"{prefix}.mamba_out.aq")
+    out = y @ qw(lp, qp, f"{prefix}.out_proj")
+    return out, (h_last, new_conv)
+
+
+# ------------------------------------------------------------------ rwkv6
+def init_rwkv(key, cfg: ModelConfig, prefix: str, n_layers: int, dtype
+              ) -> tuple[dict, dict]:
+    D, F = cfg.d_model, cfg.d_ff
+    rc = cfg.rwkv
+    H = D // rc.head_size
+    R = rc.decay_lora
+    ks = jax.random.split(key, 10)
+    L = (n_layers,) if n_layers else ()
+    lax_ = ("layers",) if n_layers else ()
+    std = D ** -0.5
+    p = {
+        # time-mix
+        f"{prefix}.mu": jax.random.uniform(ks[0], L + (5, D), dtype),
+        f"{prefix}.wr": jax.random.normal(ks[1], L + (D, D), dtype) * std,
+        f"{prefix}.wk": jax.random.normal(ks[2], L + (D, D), dtype) * std,
+        f"{prefix}.wv": jax.random.normal(ks[3], L + (D, D), dtype) * std,
+        f"{prefix}.wg": jax.random.normal(ks[4], L + (D, D), dtype) * std,
+        f"{prefix}.wo": jax.random.normal(ks[5], L + (D, D), dtype) * std,
+        f"{prefix}.decay_w1": jax.random.normal(ks[6], L + (D, R), dtype) * std,
+        f"{prefix}.decay_w2": jax.random.normal(ks[7], L + (R, D), dtype) * R ** -0.5,
+        f"{prefix}.decay_w0": jnp.full(L + (D,), -1.0, jnp.float32),
+        f"{prefix}.u": jnp.zeros(L + (D,), jnp.float32),   # time_first
+        f"{prefix}.lnx_scale": jnp.ones(L + (D,), jnp.float32),
+        f"{prefix}.lnx_bias": jnp.zeros(L + (D,), jnp.float32),
+        # channel-mix
+        f"{prefix}.cm_mu": jax.random.uniform(ks[8], L + (2, D), dtype),
+        f"{prefix}.cm_k": jax.random.normal(ks[9], L + (D, F), dtype) * std,
+        f"{prefix}.cm_v": jax.random.normal(ks[0], L + (F, D), dtype) * F ** -0.5,
+        f"{prefix}.cm_r": jax.random.normal(ks[1], L + (D, D), dtype) * std,
+    }
+    axes = {
+        f"{prefix}.mu": lax_ + ("mix5", "embed"),
+        f"{prefix}.wr": lax_ + ("embed", "rwkv_heads"),
+        f"{prefix}.wk": lax_ + ("embed", "rwkv_heads"),
+        f"{prefix}.wv": lax_ + ("embed", "rwkv_heads"),
+        f"{prefix}.wg": lax_ + ("embed", "rwkv_heads"),
+        f"{prefix}.wo": lax_ + ("rwkv_heads", "embed"),
+        f"{prefix}.decay_w1": lax_ + ("embed", "lora"),
+        f"{prefix}.decay_w2": lax_ + ("lora", "rwkv_heads"),
+        f"{prefix}.decay_w0": lax_ + ("rwkv_heads",),
+        f"{prefix}.u": lax_ + ("rwkv_heads",),
+        f"{prefix}.lnx_scale": lax_ + ("rwkv_heads",),
+        f"{prefix}.lnx_bias": lax_ + ("rwkv_heads",),
+        f"{prefix}.cm_mu": lax_ + ("mix2", "embed"),
+        f"{prefix}.cm_k": lax_ + ("embed", "rwkv_ffn"),
+        f"{prefix}.cm_v": lax_ + ("rwkv_ffn", "embed"),
+        f"{prefix}.cm_r": lax_ + ("embed", "rwkv_heads"),
+    }
+    return p, axes
+
+
+def _token_shift(x, last: Optional[jax.Array]):
+    """xs[t] = x[t-1]; xs[0] = last (or 0)."""
+    B, S, D = x.shape
+    if S == 1:
+        prev = jnp.zeros((B, 1, D), x.dtype) if last is None \
+            else last[:, None].astype(x.dtype)
+        return prev
+    head = jnp.zeros((B, 1, D), x.dtype) if last is None \
+        else last[:, None].astype(x.dtype)
+    return jnp.concatenate([head, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0, chunk: int = 64):
+    """WKV recurrence, chunked two-level scan (exact; per-token math).
+
+    r,k,v,w: (B, S, H, dh); u: (H, dh); s0: (B, H, dh, dh).
+    y_t = r_t @ (S_t + u * k_t^T v_t); S_{t+1} = diag(w_t) S_t + k_t^T v_t.
+
+    The outer scan carries state across chunks with a checkpointed body, so
+    the backward keeps one (B,H,dh,dh) state per *chunk* instead of per
+    token (a ~chunk x HBM reduction; per-token residuals measured at
+    tens of GB for 4k-seq full configs). The TPU-optimized path would be a
+    chunked Pallas kernel (DESIGN.md); this is the reference + dry-run path.
+    """
+    B, S, H, dh = r.shape
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    nch = S // C
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp   # (B, H, dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,dh,dh)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, ..., None] * kv)
+        s_new = w_t[..., None] * s + kv
+        return s_new, y
+
+    def chunk_fn(s, inp):
+        rc, kc, vc, wc = inp       # (C, B, H, dh)
+        return jax.lax.scan(step, s, (rc, kc, vc, wc))
+
+    def chunked(t):
+        t = jnp.moveaxis(t, 1, 0).astype(jnp.float32)     # (S, B, H, dh)
+        return t.reshape(nch, C, B, H, dh)
+
+    s_last, ys = jax.lax.scan(
+        jax.checkpoint(chunk_fn), s0,
+        (chunked(r), chunked(k), chunked(v), chunked(w)))
+    ys = ys.reshape(S, B, H, dh)
+    return jnp.moveaxis(ys, 0, 1), s_last   # (B,S,H,dh)
+
+
+def rwkv_timemix_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
+                       prefix: str, state: Optional[tuple] = None):
+    """RWKV6 (Finch) time-mix with data-dependent decay.
+
+    state = (shift_last (B,D), wkv_state (B,H,dh,dh)). Returns (out, state).
+    """
+    B, S, D = x.shape
+    rc = cfg.rwkv
+    dh = rc.head_size
+    H = D // dh
+    last = state[0] if state is not None else None
+    xs = _token_shift(x, last)
+    mu = lp[f"{prefix}.mu"].astype(jnp.float32)  # (5, D)
+    dx = (xs - x).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+
+    def mixed(i):
+        return (x32 + dx * mu[i]).astype(x.dtype)
+
+    r = (mixed(0) @ qw(lp, qp, f"{prefix}.wr")).reshape(B, S, H, dh)
+    k = (mixed(1) @ qw(lp, qp, f"{prefix}.wk")).reshape(B, S, H, dh)
+    v = (mixed(2) @ qw(lp, qp, f"{prefix}.wv")).reshape(B, S, H, dh)
+    g = jax.nn.silu((mixed(3) @ qw(lp, qp, f"{prefix}.wg"))
+                    .astype(jnp.float32))
+    # data-dependent decay (LoRA)
+    dd = jnp.tanh((mixed(4) @ qw(lp, qp, f"{prefix}.decay_w1"))
+                  .astype(jnp.float32))
+    dd = dd @ qw(lp, qp, f"{prefix}.decay_w2").astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(
+        lp[f"{prefix}.decay_w0"].astype(jnp.float32) + dd, -8.0, 4.0))
+    w = jnp.exp(logw).reshape(B, S, H, dh)
+    u = lp[f"{prefix}.u"].astype(jnp.float32).reshape(H, dh)
+
+    s0 = jnp.zeros((B, H, dh, dh), jnp.float32) if state is None \
+        else state[1]
+    y, s_last = _wkv_scan(r, k, v, w, u, s0, chunk=rc.chunk)
+    y = groupnorm_heads(y.reshape(B, S, D).astype(x.dtype),
+                        lp[f"{prefix}.lnx_scale"], lp[f"{prefix}.lnx_bias"],
+                        H, cfg.norm_eps)
+    y = (y.astype(jnp.float32) * g).astype(x.dtype)
+    y = qa(y, qp, f"{prefix}.tm_out.aq")
+    out = y @ qw(lp, qp, f"{prefix}.wo")
+    return out, (x[:, -1].astype(jnp.float32), s_last)
+
+
+def rwkv_chanmix_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
+                       prefix: str, state: Optional[jax.Array] = None):
+    """RWKV channel-mix FFN. state = shift_last (B, D)."""
+    xs = _token_shift(x, state)
+    mu = lp[f"{prefix}.cm_mu"].astype(jnp.float32)
+    dx = (xs - x).astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    xk = (x32 + dx * mu[0]).astype(x.dtype)
+    xr = (x32 + dx * mu[1]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu((xk @ qw(lp, qp, f"{prefix}.cm_k"))
+                               .astype(jnp.float32))).astype(x.dtype)
+    k = qa(k, qp, f"{prefix}.cm_act.aq")
+    val = k @ qw(lp, qp, f"{prefix}.cm_v")
+    r = jax.nn.sigmoid((xr @ qw(lp, qp, f"{prefix}.cm_r"))
+                       .astype(jnp.float32))
+    out = (val.astype(jnp.float32) * r).astype(x.dtype)
+    return out, x[:, -1].astype(jnp.float32)

@@ -1,0 +1,3 @@
+from repro.optim.base import (Optimizer, adam, adamw, clip_by_global_norm,
+                              get_optimizer, momentum, sgd, tree_add)
+from repro.optim.schedules import SCHEDULES, constant, cosine, step_lr

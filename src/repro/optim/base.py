@@ -1,0 +1,139 @@
+"""Native pytree optimizers (no optax dependency).
+
+API (functional, jit/pjit friendly):
+
+    opt = adam(b1=0.9, b2=0.999)
+    state = opt.init(params)
+    delta, state = opt.update(grads, state, params, lr)
+    params = tree_add(params, delta)
+
+`delta` already includes the -lr factor (params + delta applies the step),
+so QASSO can compose extra terms (the forget direction) onto it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_zeros_f32(a):
+    """f32 optimizer-state zeros regardless of (possibly bf16) param dtype."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(jnp.shape(x), jnp.float32), a)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    name: str = "opt"
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        delta = jax.tree_util.tree_map(
+            lambda g, p: (-lr * g.astype(jnp.float32)).astype(p.dtype),
+            grads, params)
+        return delta, state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(mu: float = 0.9, nesterov: bool = False) -> Optimizer:
+    # moments live in f32 even for bf16 params (training stability)
+    def init(params):
+        return tree_zeros_f32(params)
+
+    def update(grads, state, params, lr):
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: mu * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            step_dir = jax.tree_util.tree_map(
+                lambda m, g: g.astype(jnp.float32) + mu * m, new_m, grads)
+        else:
+            step_dir = new_m
+        delta = jax.tree_util.tree_map(
+            lambda d, p: (-lr * d).astype(p.dtype), step_dir, params)
+        return delta, new_m
+
+    return Optimizer(init, update, "momentum")
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, decoupled: bool = True) -> Optimizer:
+    """Adam / AdamW (decoupled=True gives AdamW)."""
+
+    def init(params):
+        return AdamState(jnp.zeros((), jnp.int32), tree_zeros_f32(params),
+                         tree_zeros_f32(params))
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        if weight_decay and not decoupled:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(jnp.float32),
+                grads, params)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state.v, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def dstep(m_, v_, p):
+            d = -lr * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay and decoupled:
+                d = d - lr * weight_decay * p.astype(jnp.float32)
+            return d.astype(p.dtype)
+
+        delta = jax.tree_util.tree_map(dstep, m, v, params)
+        return delta, AdamState(count, m, v)
+
+    return Optimizer(init, update, "adamw" if weight_decay else "adam")
+
+
+def adamw(lr_unused=None, b1=0.9, b2=0.999, eps=1e-8,
+          weight_decay=0.01) -> Optimizer:
+    return adam(b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+                decoupled=True)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return tree_scale(grads, scale), gnorm
+
+
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adam": adam, "adamw": adamw}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)

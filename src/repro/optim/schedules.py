@@ -1,0 +1,29 @@
+"""Learning-rate schedules (step -> lr), all jit-traceable."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def step_lr(lr: float, step_size: int, gamma: float = 0.1):
+    """StepLR of the paper's CNN experiments (Appendix C)."""
+    def sched(step):
+        k = jnp.floor_divide(step, step_size).astype(jnp.float32)
+        return jnp.float32(lr) * jnp.float32(gamma) ** k
+    return sched
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, min_ratio: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(lr) * jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+SCHEDULES = {"constant": constant, "step": step_lr, "cosine": cosine}

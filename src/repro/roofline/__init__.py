@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, CellCost,
+                                     cost_from_compiled, model_flops_for,
+                                     parse_collectives, scan_corrected)

@@ -1,0 +1,157 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+# ^^ must precede jax import (see launch/dryrun.py).
+
+"""Roofline harness: per (arch x shape) on the single-pod production mesh,
+derive the three roofline terms from compiled dry-run artifacts with scan
+trip-count correction (depth-1/depth-2 differencing + analytic inner-scan
+adjustment). Writes experiments/roofline.json + a markdown table.
+
+  PYTHONPATH=src python -m repro.roofline.run --arch all --step geta
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, all_cells, get_arch
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import layer_plan
+from repro.roofline import analysis as RA
+
+
+def roofline_cell(arch: str, shape_name: str, mesh, step: str,
+                  microbatches: int = 4, mode: str = "tp",
+                  serve_quant: str = "qat", serve_attn: str = "auto") -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    plan, n_blocks = layer_plan(cfg)
+    n_dev = mesh.size
+    mb = microbatches if shape.kind == "train" else 1
+
+    rec = {"arch": arch, "shape": shape_name, "step": step,
+           "n_blocks": n_blocks, "microbatches": mb, "mode": mode}
+    t0 = time.time()
+    try:
+        lowered, _, _ = build_cell(arch, shape_name, mesh, step,
+                                   microbatches=microbatches, mode=mode,
+                                   serve_quant=serve_quant,
+                                   serve_attn=serve_attn)
+        full = RA.cost_from_compiled(lowered.compile())
+        if n_blocks >= 2 and shape.kind != "decode":
+            l1, _, _ = build_cell(arch, shape_name, mesh, step, depth=1,
+                                  microbatches=microbatches, mode=mode)
+            l2, _, _ = build_cell(arch, shape_name, mesh, step, depth=2,
+                                  microbatches=microbatches, mode=mode)
+            c1 = RA.cost_from_compiled(l1.compile())
+            c2 = RA.cost_from_compiled(l2.compile())
+            cost = RA.scan_corrected(c1, c2, n_blocks, full=full)
+        else:
+            cost = full
+        # decode runs the layer stack under scan too: correct by n_blocks
+        if shape.kind == "decode" and n_blocks >= 2:
+            l1, _, _ = build_cell(arch, shape_name, mesh, step, depth=1,
+                                  mode=mode, serve_quant=serve_quant,
+                                  serve_attn=serve_attn)
+            l2, _, _ = build_cell(arch, shape_name, mesh, step, depth=2,
+                                  mode=mode, serve_quant=serve_quant,
+                                  serve_attn=serve_attn)
+            c1 = RA.cost_from_compiled(l1.compile())
+            c2 = RA.cost_from_compiled(l2.compile())
+            cost = RA.scan_corrected(c1, c2, n_blocks, full=full)
+        # gradient-accumulation loop is also a scan: one microbatch counted
+        if mb > 1:
+            cost.flops *= mb
+            cost.bytes_accessed *= mb
+            cost.wire_bytes *= mb
+        # sequence-chunk scans inside a layer: analytic adjustment
+        cost.flops += RA.inner_scan_flops(cfg, shape, n_dev)
+
+        model_flops = RA.model_flops_for(cfg, shape)
+        row = RA.make_row(arch, shape, "1pod", step, cost, model_flops,
+                          n_dev)
+        rec.update(
+            ok=True,
+            compute_s=row.compute_s, memory_s=row.memory_s,
+            collective_s=row.collective_s, dominant=row.dominant,
+            model_flops=row.model_flops,
+            hlo_flops_global=row.hlo_flops_global,
+            useful_ratio=row.useful_ratio,
+            device_gb=row.device_gb,
+            coll_counts=row.coll_counts,
+            wall_s=round(time.time() - t0, 1))
+    except Exception as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-1500:])
+    return rec
+
+
+def to_markdown(rows: list[dict]) -> str:
+    out = ["| arch | shape | step | compute s | memory s | coll s | "
+           "dominant | MODEL/HLO | dev GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | {r['step']} | "
+                       f"FAIL: {r.get('error','')[:60]} | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['device_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--step", default="geta", choices=["geta", "base"])
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--mode", default="tp", choices=["tp", "zero"])
+    ap.add_argument("--serve-quant", default="qat",
+                    choices=["qat", "prequant"])
+    ap.add_argument("--serve-attn", default="auto",
+                    choices=["auto", "psum", "seqshard"])
+    ap.add_argument("--out", default="experiments/roofline.json")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+    cells = all_cells()
+    if args.arch != "all":
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape != "all":
+        cells = [c for c in cells if c[1] == args.shape]
+
+    rows = []
+    for arch, shape in cells:
+        r = roofline_cell(arch, shape, mesh, args.step, args.microbatches,
+                          mode=args.mode, serve_quant=args.serve_quant,
+                          serve_attn=args.serve_attn)
+        rows.append(r)
+        if r.get("ok"):
+            print(f"[{len(rows):2d}/{len(cells)}] {arch:26s} {shape:12s} "
+                  f"c={r['compute_s']:.4f}s m={r['memory_s']:.4f}s "
+                  f"w={r['collective_s']:.4f}s dom={r['dominant']:10s} "
+                  f"useful={r['useful_ratio']:.2f} gb={r['device_gb']:.1f}",
+                  flush=True)
+        else:
+            print(f"[{len(rows):2d}/{len(cells)}] {arch:26s} {shape:12s} "
+                  f"FAIL {r['error']}", flush=True)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    with open(args.out.replace(".json", ".md"), "w") as f:
+        f.write(to_markdown(rows) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

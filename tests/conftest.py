@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests must see the REAL device view (1 CPU) — never the dry-run's 512
+# placeholder devices. Guard against accidental inheritance.
+os.environ.pop("XLA_FLAGS", None) if "force_host_platform" in \
+    os.environ.get("XLA_FLAGS", "") else None
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,151 @@
+"""Fault tolerance: checkpoint/restart, deterministic replay, straggler
+flagging, elastic reshard."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.synthetic import image_batch, lm_batch
+from repro.distributed.fault import (FaultConfig, FaultTolerantLoop,
+                                     HeartbeatRegistry, StragglerMonitor)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.bfloat16)},
+            "t": (jnp.int32(7), jnp.zeros(())),
+            }
+    save_checkpoint(str(tmp_path), 42, tree)
+    assert latest_step(str(tmp_path)) == 42
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 42
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_checkpoint_async_and_latest(tmp_path):
+    tree = {"w": jnp.ones((4, 4))}
+    t = save_checkpoint(str(tmp_path), 1, tree, async_write=True)
+    t.join()
+    save_checkpoint(str(tmp_path), 5, {"w": jnp.ones((4, 4)) * 5})
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 5
+    assert float(restored["w"][0, 0]) == 5.0
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A tmp dir without manifest is never considered a checkpoint."""
+    os.makedirs(tmp_path / ".tmp_step_9")
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 3, {"w": jnp.zeros(2)})
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_data_pipeline_deterministic_replay():
+    """batch(seed, step) is a pure function — exact replay after restart."""
+    b1 = lm_batch(0, 17, 4, 32, 1000)
+    b2 = lm_batch(0, 17, 4, 32, 1000)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = lm_batch(0, 18, 4, 32, 1000)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    i1 = image_batch(0, 5, 4)
+    i2 = image_batch(0, 5, 4)
+    np.testing.assert_array_equal(np.asarray(i1["images"]),
+                                  np.asarray(i2["images"]))
+
+
+def test_fault_loop_recovers_and_replays(tmp_path):
+    """Injected failure -> restore from checkpoint -> identical final state
+    to an uninterrupted run (determinism through restarts)."""
+
+    def make_run(fail_at):
+        trace = []
+
+        def step_fn(state, i):
+            if fail_at is not None and i == fail_at[0]:
+                fail_at[0] = None  # fire once
+                raise RuntimeError("injected failure")
+            b = lm_batch(0, i, 2, 8, 100)
+            state = state + float(jnp.sum(b["tokens"]))
+            trace.append(i)
+            return state
+
+        store = {}
+
+        def save_fn(state, step):
+            store["ckpt"] = (state, step)
+
+        def restore_fn():
+            return store.get("ckpt")
+
+        loop = FaultTolerantLoop(FaultConfig(checkpoint_every=3), step_fn,
+                                 save_fn, restore_fn)
+        final, result = loop.run(0.0, 10)
+        return final, result
+
+    clean, r0 = make_run(None)
+    faulty, r1 = make_run([7])
+    assert r0.restarts == 0
+    assert r1.restarts == 1
+    assert clean == pytest.approx(faulty)
+
+
+def test_fault_loop_gives_up_after_max_restarts():
+    def step_fn(state, i):
+        raise RuntimeError("permafail")
+
+    loop = FaultTolerantLoop(FaultConfig(max_restarts=2), step_fn,
+                             lambda s, i: None, lambda: None)
+    with pytest.raises(RuntimeError):
+        loop.run(0, 5)
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(factor=2.0, patience=2)
+    for _ in range(10):
+        mon.record("fast", 0.1)
+    mon.record("slow", 1.0)
+    mon.record("slow", 1.0)
+    assert "slow" in mon.flagged
+    assert "fast" not in mon.flagged
+
+
+def test_heartbeat_timeout():
+    reg = HeartbeatRegistry(["a", "b"], timeout=10.0)
+    reg.beat("a", now=100.0)
+    reg.beat("b", now=100.0)
+    assert reg.dead_hosts(now=105.0) == []
+    reg.beat("a", now=120.0)
+    assert reg.dead_hosts(now=125.0) == ["b"]
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Restore places arrays with NEW shardings (mesh change simulated by
+    restoring with explicit single-device shardings)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, step = restore_checkpoint(str(tmp_path), tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.asarray(tree["w"]))
+
+
+def test_train_loop_end_to_end_with_failure(tmp_path):
+    """The real GETA train loop survives an injected node failure."""
+    from repro.launch.train import train_loop
+    state, qadg, qasso, losses = train_loop(
+        "internlm2-1.8b", smoke=True, steps=24, batch=2, seq=16,
+        ckpt_dir=str(tmp_path), inject_failure_at=13, verbose=False)
+    assert len(losses) >= 24
+    assert np.isfinite(losses[-1])

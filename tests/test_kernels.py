@@ -1,0 +1,88 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import (fake_quant_bwd_ref, fake_quant_fwd_ref,
+                               masked_matmul_ref, quant_matmul_ref)
+
+SHAPES = [(8, 128), (57, 200), (256, 512), (1, 384), (130, 129)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fake_quant_fwd_sweep(shape, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(0), shape) * 2).astype(dtype)
+    d, qm, t = jnp.float32(0.05), jnp.float32(1.4), jnp.float32(0.85)
+    y = ops.fake_quant_op(x, d, qm, t, True)
+    yr = fake_quant_fwd_ref(x, d, qm, t)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(64, 256), (33, 140)])
+def test_fake_quant_bwd_sweep(shape):
+    x = jax.random.normal(jax.random.PRNGKey(1), shape) * 1.5
+    g = jax.random.normal(jax.random.PRNGKey(2), shape)
+    d, qm, t = jnp.float32(0.08), jnp.float32(1.1), jnp.float32(1.0)
+
+    def loss(x, d, qm, t):
+        return jnp.sum(ops.fake_quant_op(x, d, qm, t, True) * g)
+
+    dx, dd, dqm, dt = jax.grad(loss, argnums=(0, 1, 2, 3))(x, d, qm, t)
+    rdx, rdd, rdqm, rdt = fake_quant_bwd_ref(x, d, qm, t, g)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rdx), rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(float(dd), float(rdd), rtol=1e-3)
+    np.testing.assert_allclose(float(dqm), float(rdqm), rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(float(dt), float(rdt), rtol=1e-3)
+
+
+MM_SHAPES = [(16, 128, 128), (64, 256, 384), (100, 130, 200), (8, 512, 64)]
+
+
+@pytest.mark.parametrize("mnk", MM_SHAPES)
+def test_masked_matmul_sweep(mnk):
+    m, k, n = mnk
+    x = jax.random.normal(jax.random.PRNGKey(3), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(4), (k, n))
+    mask = (jax.random.uniform(jax.random.PRNGKey(5), (n,)) > 0.4).astype(
+        jnp.float32)
+    y = ops.masked_matmul_op(x, w, mask, interpret=True)
+    yr = masked_matmul_ref(x, w, mask)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+    # pruned columns are exactly zero
+    zero_cols = np.nonzero(np.asarray(mask) < 0.5)[0]
+    assert np.all(np.asarray(y)[:, zero_cols] == 0.0)
+
+
+@pytest.mark.parametrize("mnk", MM_SHAPES)
+@pytest.mark.parametrize("code_dtype", [jnp.int8, jnp.int32])
+def test_quant_matmul_sweep(mnk, code_dtype):
+    m, k, n = mnk
+    x = jax.random.normal(jax.random.PRNGKey(6), (m, k))
+    codes = jax.random.randint(jax.random.PRNGKey(7), (k, n), -127,
+                               127).astype(code_dtype)
+    scale = jax.random.uniform(jax.random.PRNGKey(8), (n,)) * 0.05
+    y = ops.quant_matmul_op(x, codes, scale, interpret=True)
+    yr = quant_matmul_ref(x, codes, scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_fake_quant_bf16_threedim():
+    """Leading dims folded correctly."""
+    x = (jax.random.normal(jax.random.PRNGKey(9), (4, 33, 257))).astype(
+        jnp.bfloat16)
+    d, qm, t = jnp.float32(0.1), jnp.float32(2.0), jnp.float32(1.0)
+    y = ops.fake_quant_op(x, d, qm, t, True)
+    yr = fake_quant_fwd_ref(x, d, qm, t)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), rtol=2e-2,
+                               atol=2e-2)

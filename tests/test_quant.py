@@ -1,0 +1,109 @@
+"""Quantization math (paper §3): forward, STE gradients, bit-width algebra."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import quant as Q
+from repro.kernels.ref import fake_quant_bwd_ref, fake_quant_fwd_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_bit_width_roundtrip():
+    """Eq 3 and its inverse agree across the whole operating range."""
+    for bits in (2.0, 4.0, 6.0, 8.0, 12.0, 16.0, 32.0):
+        for q_m in (0.1, 1.0, 3.7):
+            for t in (0.5, 1.0, 1.5):
+                d = Q.step_size_for_bits(jnp.float32(q_m), jnp.float32(t),
+                                         jnp.float32(bits))
+                b = Q.bit_width(d, jnp.float32(q_m), jnp.float32(t))
+                assert abs(float(b) - bits) < 1e-4
+
+
+@given(q_m=st.floats(0.05, 8.0), t=st.floats(0.3, 2.0),
+       b_l=st.floats(2.0, 6.0), span=st.floats(1.0, 10.0),
+       d=st.floats(1e-6, 10.0))
+@settings(max_examples=80, deadline=None)
+def test_projection_enforces_bit_range(q_m, t, b_l, span, d):
+    """PPSG projection (Alg 3): after projecting d, b in [b_l, b_u]."""
+    b_u = b_l + span
+    qp = Q.QuantParams(d=jnp.float32(d), q_m=jnp.float32(q_m),
+                       t=jnp.float32(t))
+    qp2 = Q.project_step_size(qp, b_l, b_u)
+    b = float(Q.bit_width(qp2.d, qp2.q_m, qp2.t))
+    assert b_l - 1e-3 <= b <= b_u + 1e-3
+    # q_m and t untouched (only d is projected — paper §5.1)
+    assert float(qp2.q_m) == pytest.approx(q_m)
+    assert float(qp2.t) == pytest.approx(t)
+
+
+def test_fake_quant_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 96)) * 2.0
+    y = Q.fake_quant(x, jnp.float32(0.1), jnp.float32(1.2), jnp.float32(0.8))
+    yr = fake_quant_fwd_ref(x, 0.1, 1.2, 0.8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-6)
+
+
+def test_fake_quant_levels_match_bits():
+    """The number of distinct quantization levels obeys the derived bits."""
+    x = jnp.linspace(-2.0, 2.0, 4001)
+    d = Q.step_size_for_bits(jnp.float32(1.0), jnp.float32(1.0),
+                             jnp.float32(4.0))
+    y = Q.fake_quant(x, d, jnp.float32(1.0), jnp.float32(1.0))
+    levels = np.unique(np.asarray(y))
+    # b=4 -> 2^(b-1)-1 = 7 positive levels + 0 + 7 negative = 15
+    assert len(levels) <= 2 ** 4 - 1
+    assert len(levels) >= 2 ** 4 - 3
+
+
+def test_ste_gradients_match_paper_formulas():
+    """custom_vjp gradients == Eqs 4-6 (via the ref implementation)."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (37, 53)) * 1.5
+    g = jax.random.normal(jax.random.PRNGKey(2), x.shape)
+    d, qm, t = jnp.float32(0.07), jnp.float32(1.1), jnp.float32(0.9)
+
+    def loss(x, d, qm, t):
+        return jnp.sum(Q.fake_quant(x, d, qm, t) * g)
+
+    dx, dd, dqm, dt = jax.grad(loss, argnums=(0, 1, 2, 3))(x, d, qm, t)
+    rdx, rdd, rdqm, rdt = fake_quant_bwd_ref(x, d, qm, t, g)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rdx), rtol=1e-5)
+    np.testing.assert_allclose(float(dd), float(rdd), rtol=1e-4)
+    np.testing.assert_allclose(float(dqm), float(rdqm), rtol=1e-4)
+    np.testing.assert_allclose(float(dt), float(rdt), rtol=1e-4)
+
+
+def test_grad_qm_zero_inside_clip():
+    """Eq 6: dL/dq_m = 0 when all |x| <= q_m."""
+    x = jnp.ones((8, 8)) * 0.3
+    dqm = jax.grad(
+        lambda qm: jnp.sum(Q.fake_quant(x, jnp.float32(0.01), qm,
+                                        jnp.float32(1.0))))(jnp.float32(2.0))
+    assert float(dqm) == 0.0
+
+
+def test_quantize_int_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(3), (32, 32))
+    qp = Q.init_quant_params(w, bits=8.0)
+    codes, d = Q.quantize_int(w, qp)
+    xq = Q.dequantize_int(codes, d)
+    yq = Q.fake_quant(w, qp.d, qp.q_m, qp.t)
+    np.testing.assert_allclose(np.asarray(xq), np.asarray(yq), rtol=1e-5,
+                               atol=1e-6)
+    # codes fit in the derived bit budget
+    maxcode = float(jnp.max(jnp.abs(codes)))
+    assert maxcode <= 2 ** 7  # 8 bits symmetric
+
+
+@given(bits=st.floats(3.0, 12.0))
+@settings(max_examples=25, deadline=None)
+def test_init_matches_requested_bits(bits):
+    w = jax.random.normal(jax.random.PRNGKey(4), (16, 16))
+    qp = Q.init_quant_params(w, bits=bits)
+    b = float(Q.bit_width(qp.d, qp.q_m, qp.t))
+    assert abs(b - bits) < 1e-3
