@@ -144,20 +144,64 @@ def bench_kernel_fake_quant(fast=False):
     return {"fused_us": tf, "ref_us": tr}
 
 
-def bench_serve_decode(fast=False):
-    """Decode throughput of the quantized serving path (smoke scale)."""
-    from repro.launch.serve import serve_loop
+def bench_kernel_fused_joint(fast=False):
+    """Fused x @ (fake_quant(w) * mask) GEMM epilogue vs the unfused
+    quantize -> mask -> matmul chain (three HBM passes of W). Timed on this
+    host's default dispatch backend; the TPU win is the single HBM pass of
+    W (DESIGN.md §4)."""
+    from repro.core.quant import fake_quant
+    from repro.kernels import ops
+    m, k, n = (256, 1024, 1024) if fast else (512, 2048, 2048)
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    mask = (jax.random.uniform(jax.random.PRNGKey(2), (n,)) > 0.4).astype(
+        jnp.float32)
+    d, qm, t = jnp.float32(0.05), jnp.float32(1.2), jnp.float32(0.9)
+
+    fused = jax.jit(lambda x, w: ops.fq_masked_matmul_op(x, w, mask, d, qm, t))
+    unfused = jax.jit(
+        lambda x, w: x @ (fake_quant(w, d, qm, t) * mask[None, :]))
+    fused(x, w).block_until_ready()
+    unfused(x, w).block_until_ready()
+    reps = 10 if fast else 30
     t0 = time.time()
-    seq = serve_loop("internlm2-1.8b", smoke=True, batch=2, prompt_len=4,
-                     gen=8 if fast else 16, verbose=False)
-    us = (time.time() - t0) * 1e6 / max(seq.shape[1], 1)
-    _row("serve_decode_smoke", us, f"tokens={int(np.prod(seq.shape))}")
-    return {"us_per_token": us}
+    for _ in range(reps):
+        fused(x, w).block_until_ready()
+    tf = (time.time() - t0) / reps * 1e6
+    t0 = time.time()
+    for _ in range(reps):
+        unfused(x, w).block_until_ready()
+    tu = (time.time() - t0) / reps * 1e6
+    _row("kernel_fused_joint_gemm", tf,
+         f"unfused_us={tu:.1f};speedup={tu/max(tf,1e-9):.2f}x")
+    return {"fused_us": tf, "unfused_us": tu}
+
+
+def bench_serve_decode(fast=False):
+    """Decode throughput: dense fake-quant params vs compressed Subnet int
+    codes (the quant-dequant GEMM epilogue), same smoke model. Timing is
+    decode-only (the prefill inside serve_loop warms the jit, so compile
+    and init are excluded)."""
+    from repro.launch.serve import serve_loop
+    gen = 8 if fast else 16
+    out = {}
+    for mode, compressed in (("dense", False), ("compressed", True)):
+        stats = {}
+        serve_loop("internlm2-1.8b", smoke=True, batch=2, prompt_len=4,
+                   gen=gen, compressed=compressed, verbose=False,
+                   stats=stats)
+        us = stats["decode_s"] * 1e6 / max(stats["tokens"], 1)
+        _row(f"serve_decode_{mode}", us,
+             f"tok_per_s={stats['tok_per_s']:.1f}")
+        out[mode] = us
+    _row("serve_decode_compressed_speedup", 0.0,
+         f"{out['dense']/max(out['compressed'],1e-9):.2f}x")
+    return out
 
 
 ALL = [bench_table2_resnet20, bench_table3_bert, bench_table4_vgg7,
        bench_table5_resnet56, bench_fig4a_ablation, bench_fig4b_frontier,
-       bench_kernel_fake_quant, bench_serve_decode]
+       bench_kernel_fake_quant, bench_kernel_fused_joint, bench_serve_decode]
 
 
 def main() -> None:

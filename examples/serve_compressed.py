@@ -1,6 +1,7 @@
-"""Serve a (QAT-quantized) LM with batched KV-cache decoding.
+"""Serve an LM with batched KV-cache decoding — dense fake-quant params or
+the compressed Subnet int-code path (see examples/README.md §4).
 
-    PYTHONPATH=src python examples/serve_compressed.py --gen 32
+    PYTHONPATH=src python examples/serve_compressed.py --gen 32 --compressed
 """
 import argparse
 
@@ -15,10 +16,13 @@ def main():
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--no-quant", dest="quant", action="store_false",
                     default=True)
+    ap.add_argument("--compressed", action="store_true", default=False,
+                    help="decode from Subnet int codes (quant-dequant GEMM "
+                         "epilogue) instead of dense weights")
     args = ap.parse_args()
     serve_loop(args.arch, smoke=True, batch=args.batch,
                prompt_len=args.prompt_len, gen=args.gen,
-               quantized=args.quant)
+               quantized=args.quant, compressed=args.compressed)
 
 
 if __name__ == "__main__":

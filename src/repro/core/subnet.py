@@ -3,8 +3,16 @@
 Mirrors the paper's Framework Usage line 8. Produces:
 - physically sliced parameters (pruned units removed),
 - integer weight codes + scales for every weight-quant site (the
-  `repro.kernels.quant_matmul` serving path),
+  `repro.kernels` quant-dequant GEMM serving path),
 - a manifest (kept units per family, per-site bit widths, BOPs summary).
+
+Serving integration: `servable_params()` flattens a Subnet into the param
+dict convention consumed by `models.layers.dense_proj` — each compressed
+2-D weight `<name>` becomes `<name>.codes` + `<name>.scale`, and the
+model's matmuls then execute the dequant epilogue on the shared GEMM core
+(int codes stream HBM->VMEM, decode inside VMEM). `compress_lm()` builds
+such a Subnet for an LM without a pruning run (keep-all), which is what
+`python -m repro.launch.serve --compressed` uses.
 """
 from __future__ import annotations
 
@@ -17,6 +25,15 @@ import numpy as np
 
 from repro.core.qadg import QADG
 from repro.core.quant import QuantParams, bit_width, quantize_int
+
+
+def _storage_dtype(bits: float):
+    nbits = int(np.ceil(bits))
+    if nbits <= 8:
+        return jnp.int8
+    if nbits <= 16:
+        return jnp.int16
+    return jnp.int32
 
 
 @dataclasses.dataclass
@@ -47,14 +64,7 @@ def construct_subnet(qadg: QADG, params: dict, qparams: dict,
                 continue
             codes, d = quantize_int(sliced[pname], qp)
             # narrowest container that holds the codes
-            nbits = int(np.ceil(b))
-            if nbits <= 8:
-                store = codes.astype(jnp.int8)
-            elif nbits <= 16:
-                store = codes.astype(jnp.int16)
-            else:
-                store = codes.astype(jnp.int32)
-            int_weights[pname] = store
+            int_weights[pname] = codes.astype(_storage_dtype(b))
             scales[pname] = d
 
     n_total = qadg.space.total_units()
@@ -68,3 +78,110 @@ def construct_subnet(qadg: QADG, params: dict, qparams: dict,
             "mean_bits": float(np.mean(list(bits.values()))) if bits else 32.0,
             "n_sites": len(qadg.sites),
         })
+
+
+# --------------------------------------------------------------- serving
+def _routed(name: str) -> bool:
+    """True if the models execute this weight through `dense_proj` (and so
+    would consume `<name>.codes` at decode time). MoE einsum weights
+    (router/we_*) and the embedding are not routed: their forward reads
+    the dense tensor."""
+    from repro.models.layers import ROUTED_COMPONENTS
+    if name == "head":
+        return True
+    parts = name.split(".")
+    return len(parts) >= 2 and parts[-2] in ROUTED_COMPONENTS
+
+
+def compress_lm(lm, params: dict, qparams: dict,
+                components: tuple[str, ...] | None = None) -> Subnet:
+    """Quantize an LM's projection weights to int codes (no pruning).
+
+    `lm` is a `models.transformer.LM`; `qparams` its weight-quant sites
+    (`<name>.wq` -> QuantParams). Every routed quantizable weight — all
+    `dense_proj` components (attn/mlp/mamba/rwkv/shared) by default,
+    optionally narrowed via `components` — is replaced by integer codes +
+    a scale; everything else stays dense. Returns a keep-all Subnet."""
+    int_weights: dict[str, jax.Array] = {}
+    scales: dict[str, jax.Array] = {}
+    bits: dict[str, float] = {}
+    dense = dict(params)
+    dense_bytes = quant_bytes = 0
+    for name in lm.quant_weight_names():
+        site = name + ".wq"
+        if name not in params or site not in qparams:
+            continue
+        parts = name.split(".")
+        comp = parts[-2] if len(parts) >= 2 else ""
+        if components is not None and comp not in components:
+            continue
+        if not _routed(name):
+            # only compress weights the decode can actually execute from
+            # codes — popping a non-routed weight would drop it entirely
+            # (servable_params re-emits codes for routed names only)
+            continue
+        qp: QuantParams = qparams[site]
+        b = float(bit_width(qp.d, qp.q_m, qp.t))
+        codes, d = quantize_int(params[name], qp)
+        store = codes.astype(_storage_dtype(b))
+        int_weights[name] = store
+        scales[name] = d
+        bits[site] = b
+        dense_bytes += params[name].size * params[name].dtype.itemsize
+        quant_bytes += store.size * store.dtype.itemsize
+        dense.pop(name)
+    return Subnet(
+        params=dense, int_weights=int_weights, scales=scales, bits=bits,
+        kept_units={},
+        meta={
+            "sparsity": 0.0,
+            "mean_bits": float(np.mean(list(bits.values()))) if bits else 32.0,
+            "n_sites": len(bits),
+            "weight_bytes_dense": dense_bytes,
+            "weight_bytes_compressed": quant_bytes,
+        })
+
+
+def residual_qparams(subnet: Subnet, qparams: dict) -> Optional[dict]:
+    """Quant sites for weights the compressed decode keeps dense.
+
+    Weights executing from int codes already carry their quantizer inside
+    the codes; the rest (embedding, MoE einsum weights — anything
+    `servable_params` does not emit codes for) must keep their fake-quant
+    site so compressed and dense decodes share numerics."""
+
+    def executes_from_codes(site: str) -> bool:
+        if not site.endswith(".wq"):
+            return False
+        name = site[:-len(".wq")]
+        return name in subnet.int_weights and _routed(name)
+
+    out = {site: qp for site, qp in qparams.items()
+           if not executes_from_codes(site)}
+    return out or None
+
+
+def servable_params(subnet: Subnet) -> dict:
+    """Flatten a Subnet into the `dense_proj` param-dict convention.
+
+    Compressed sites appear as `<name>.codes` (narrow int container,
+    scan-stacked exactly like the dense tensor was) + `<name>.scale`;
+    remaining params pass through. Feed the result anywhere a params dict
+    is accepted (`LM.decode_step`, `LM.forward`)."""
+    out = dict(subnet.params)
+    for name, codes in subnet.int_weights.items():
+        if not _routed(name):
+            continue   # forward reads this weight dense; codes would only
+            # bloat the scan carry (construct_subnet quantizes every site)
+        scale = subnet.scales[name]
+        if codes.ndim >= 3 and jnp.ndim(scale) == 0:
+            # LM block weights are stacked (n_blocks, K, N): broadcast the
+            # per-tensor scale over the stack axis so it scans with the
+            # codes through the layer-stack lax.scan.
+            scale = jnp.broadcast_to(scale, codes.shape[:1])
+        # drop the dense copy (construct_subnet keeps it in sliced params);
+        # carrying both would invert the bandwidth win
+        out.pop(name, None)
+        out[name + ".codes"] = codes
+        out[name + ".scale"] = scale
+    return out

@@ -12,12 +12,30 @@ Gradient compression (int8 + per-block scales, error feedback):
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:  # JAX >= 0.6 exports shard_map at the top level
+    from jax import shard_map as _shard_map
+except ImportError:  # older JAX: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-compatible shard_map: the replication-check kwarg was renamed
+    (check_rep -> check_vma) across JAX releases; forward whichever the
+    installed version accepts."""
+    params = inspect.signature(_shard_map).parameters
+    if "check_vma" in params:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
 
 BLOCK = 256
 

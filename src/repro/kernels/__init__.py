@@ -1,3 +1,22 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""TPU kernel package: one tiled-GEMM core, composable epilogues, and a
+backend dispatch registry. See DESIGN.md §4.
+
+Public surface:
+  dispatch   — backend selection (pallas-tpu / pallas-interpret / xla-ref)
+  gemm_core  — the shared (bm, bn, bk) pipeline + RhsOp epilogue configs
+  ops        — jit'd differentiable entry points used by the models
+"""
+from repro.kernels.dispatch import (available_backends, resolve, set_backend,
+                                    use_backend)
+from repro.kernels.gemm_core import (RhsOp, col_mask, dequant, fake_quant_rhs,
+                                     gemm)
+from repro.kernels.ops import (fake_quant_op, fq_masked_matmul_op,
+                               fq_matmul_op, masked_matmul_op, matmul_op,
+                               quant_matmul_op)
+
+__all__ = [
+    "available_backends", "resolve", "set_backend", "use_backend",
+    "RhsOp", "col_mask", "dequant", "fake_quant_rhs", "gemm",
+    "fake_quant_op", "fq_masked_matmul_op", "fq_matmul_op",
+    "masked_matmul_op", "matmul_op", "quant_matmul_op",
+]

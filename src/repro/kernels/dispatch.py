@@ -1,0 +1,97 @@
+"""Kernel backend registry: one place that decides how GEMMs execute.
+
+Backends:
+  pallas-tpu        — compiled Pallas kernels (MXU path; requires a TPU).
+  pallas-interpret  — the same kernels through the Pallas interpreter
+                      (bit-faithful to the kernel logic on any platform;
+                      used by the parity tests and for debugging).
+  xla-ref           — the pure-jnp oracle composition (`kernels/ref.py`
+                      semantics). Default off-TPU: XLA's native dot is the
+                      fastest correct implementation on CPU/GPU hosts.
+
+Selection order (first match wins):
+  1. explicit per-call ``backend=`` argument,
+  2. legacy ``interpret=`` boolean (True -> pallas-interpret,
+     False -> pallas-tpu),
+  3. process-wide override (`set_backend()` / `use_backend()` /
+     ``REPRO_KERNEL_BACKEND`` env var),
+  4. platform default: pallas-tpu on TPU hosts, xla-ref elsewhere.
+
+This replaces the per-module ``_interpret_default()`` platform sniffing the
+three seed kernels each carried.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+BACKENDS = ("pallas-tpu", "pallas-interpret", "xla-ref")
+
+_state = {"override": None}
+
+
+def available_backends() -> tuple[str, ...]:
+    return BACKENDS
+
+
+def platform_default() -> str:
+    """pallas-tpu on a single-device TPU host, xla-ref everywhere else.
+
+    Under a multi-device GSPMD mesh a pallas_call is an opaque custom call
+    with no partitioning rule — GSPMD would all-gather the full weight per
+    call — so sharded programs default to XLA's native (partitionable) dot
+    until the kernels grow shard_map integration. Override explicitly to
+    opt in."""
+    if jax.default_backend() == "tpu" and jax.device_count() == 1:
+        return "pallas-tpu"
+    return "xla-ref"
+
+
+def set_backend(name: str | None) -> None:
+    """Process-wide backend override (None restores platform selection)."""
+    if name is not None and name not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; "
+                         f"expected one of {BACKENDS}")
+    _state["override"] = name
+
+
+def get_backend_override() -> str | None:
+    return _state["override"]
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped backend override (tests / benchmarks)."""
+    prev = _state["override"]
+    set_backend(name)
+    try:
+        yield
+    finally:
+        _state["override"] = prev
+
+
+def resolve(backend: str | None = None,
+            interpret: bool | str | None = None) -> str:
+    """Resolve the effective backend name for one kernel call."""
+    if backend is None and isinstance(interpret, str):
+        # legacy positional slot carrying a backend name
+        backend = interpret
+        interpret = None
+    if backend is not None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown kernel backend {backend!r}; "
+                             f"expected one of {BACKENDS}")
+        return backend
+    if interpret is not None:
+        return "pallas-interpret" if interpret else "pallas-tpu"
+    if _state["override"] is not None:
+        return _state["override"]
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(f"REPRO_KERNEL_BACKEND={env!r} is not one of "
+                             f"{BACKENDS}")
+        return env
+    return platform_default()

@@ -1,0 +1,180 @@
+"""Single tiled-GEMM core with composable RHS-transform epilogues.
+
+Every matmul-shaped kernel in this package — structured-mask matmul
+(training joint stage), int-code dequant matmul (compressed serving), and
+the fused fake-quant + mask projection — is the *same* (bm, bn, bk)
+MXU-aligned pipeline differing only in how the weight tile is transformed
+after the HBM->VMEM load. This module owns that pipeline once:
+
+  y = x @ T(w),    T = op_n ∘ ... ∘ op_1      (applied to RHS tiles in VMEM)
+
+with pad-to-block / slice-back handled in exactly one place. The legacy
+entry points (`masked_matmul.py`, `quant_matmul.py`) are thin op-configs
+over `gemm()`.
+
+Blocking: classic (bm, bn, bk) tiling with f32 accumulation into the output
+block across the K grid axis. K is the innermost / fastest-varying grid
+dimension, so revisits of an (i, j) output block are consecutive and the
+accumulator pattern is valid on TPU.
+
+Each `RhsOp` declares its operands as either a per-output-column vector
+("col", shape (N,), delivered as a (1, bn) VMEM block riding the j grid
+axis) or a scalar ("scalar", delivered as a (1, 1) block mapped to every
+grid step). `op.apply` consumes jnp values, so the same callable serves the
+Pallas kernel body *and* the xla-ref oracle backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant import _EPS, clip_qmt
+from repro.kernels import dispatch
+
+DEFAULT_BLOCKS = (128, 128, 128)  # bm, bn, bk
+
+COL, SCALAR = "col", "scalar"
+
+
+@dataclasses.dataclass(frozen=True)
+class RhsOp:
+    """One composable transform of the (bk, bn) RHS tile.
+
+    kinds: operand kinds, each COL ((N,) vector, blocked (1, bn)) or
+           SCALAR ((1, 1) everywhere).
+    apply: (w_f32, *operand_values) -> w_f32; operand values arrive as
+           (1, bn) / (1, 1) f32 arrays (full-width (1, N) on xla-ref).
+    """
+    name: str
+    kinds: tuple[str, ...]
+    apply: Callable[..., jax.Array]
+    operands: tuple[jax.Array, ...]
+
+    def __post_init__(self):
+        assert len(self.kinds) == len(self.operands), (self.name, self.kinds)
+
+
+# ------------------------------------------------------------- op factories
+def col_mask(mask: jax.Array) -> RhsOp:
+    """w *= mask[None, :] — structured column (pruning-group) mask."""
+    return RhsOp("col_mask", (COL,), lambda w, m: w * m, (mask,))
+
+
+def dequant(scale: jax.Array) -> RhsOp:
+    """w = codes * scale[None, :] — int-code dequantization."""
+    return RhsOp("dequant", (COL,), lambda w, s: w * s, (scale,))
+
+
+def _fq_apply(w, dv, qmv, tv):
+    # Reuses core.quant.clip_qmt so the in-tile rounding decisions match
+    # the XLA quantizer bit-for-bit (a reimplementation that differs by
+    # 1 ulp flips round ties by a whole step of d).
+    d = jnp.maximum(dv[0, 0], _EPS)
+    xt = clip_qmt(jnp.abs(w), qmv[0, 0], tv[0, 0])
+    return d * jnp.round(xt / d) * jnp.sign(w)
+
+
+def fake_quant_rhs(d: jax.Array, q_m: jax.Array, t: jax.Array) -> RhsOp:
+    """w = fake_quant(w; d, q_m, t) — paper Eqs (1)-(2) on the weight tile."""
+    scal = lambda v: jnp.asarray(v, jnp.float32).reshape(())
+    return RhsOp("fake_quant", (SCALAR,) * 3, _fq_apply,
+                 (scal(d), scal(q_m), scal(t)))
+
+
+def fq_mask_ops(d, q_m, t, mask) -> tuple[RhsOp, ...]:
+    """The GETA joint-stage RHS: fake_quant(w) * mask in one HBM pass."""
+    return (fake_quant_rhs(d, q_m, t), col_mask(mask))
+
+
+# ----------------------------------------------------------------- kernel
+def _make_kernel(ops: tuple[RhsOp, ...]):
+    def kernel(*refs):
+        x_ref, w_ref = refs[0], refs[1]
+        op_refs = refs[2:-1]
+        o_ref = refs[-1]
+        k = pl.program_id(2)
+
+        @pl.when(k == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        x = x_ref[...].astype(jnp.float32)
+        w = w_ref[...].astype(jnp.float32)
+        i = 0
+        for op in ops:
+            vals = [op_refs[i + j][...].astype(jnp.float32)
+                    for j in range(len(op.kinds))]
+            w = op.apply(w, *vals)
+            i += len(op.kinds)
+        o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    return kernel
+
+
+def _clamp_blocks(blocks, M, N, K):
+    bm, bn, bk = blocks
+    return (min(bm, max(8, M)), min(bn, max(128, N)), min(bk, max(128, K)))
+
+
+def gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,
+         blocks=DEFAULT_BLOCKS, backend: str | None = None,
+         out_dtype=None) -> jax.Array:
+    """y = x @ T(w) with T the composition of `rhs_ops`.
+
+    x: (M, K); w: (K, N) (any dtype castable to f32, incl. int8/int16
+    codes). COL operands are (N,) vectors; SCALAR operands are scalars.
+    Pads every dim to block multiples once; output sliced back to (M, N).
+    """
+    backend = dispatch.resolve(backend)
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    out_dtype = out_dtype or x.dtype
+
+    if backend == "xla-ref":
+        w32 = w.astype(jnp.float32)
+        for op in rhs_ops:
+            vals = [v.astype(jnp.float32).reshape(
+                        (1, -1) if kind == COL else (1, 1))
+                    for kind, v in zip(op.kinds, op.operands)]
+            w32 = op.apply(w32, *vals)
+        y = x.astype(jnp.float32) @ w32
+        return y.astype(out_dtype)
+
+    bm, bn, bk = _clamp_blocks(blocks, M, N, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk))) if (pm or pk) else x
+    wp = jnp.pad(w, ((0, pk), (0, pn))) if (pk or pn) else w
+    Mp, Kp = xp.shape
+    Np = wp.shape[1]
+    grid = (Mp // bm, Np // bn, Kp // bk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    operands = []
+    for op in rhs_ops:
+        for kind, v in zip(op.kinds, op.operands):
+            if kind == COL:
+                vp = jnp.pad(v, (0, pn)) if pn else v
+                operands.append(vp.astype(jnp.float32).reshape(1, -1))
+                in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+            else:
+                operands.append(
+                    jnp.asarray(v, jnp.float32).reshape(1, 1))
+                in_specs.append(pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)))
+
+    y = pl.pallas_call(
+        _make_kernel(tuple(rhs_ops)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        interpret=(backend == "pallas-interpret"),
+    )(xp, wp, *operands)
+    return y[:M, :N].astype(out_dtype)

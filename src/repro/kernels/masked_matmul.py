@@ -1,77 +1,26 @@
-"""Structured-pruning-aware matmul Pallas kernel.
+"""Structured-pruning-aware matmul: a thin epilogue config over the core.
 
 During GETA's joint stage, redundant parameter groups are progressively
 forgotten; training computes `x @ (w * mask_cols)` where `mask_cols` zeroes
 entire output columns (minimally removable structures). Materializing the
-masked weight costs a full HBM write + read of W per step; this kernel fuses
-the column mask into the RHS tile load instead, so W streams HBM->VMEM once
-and the mask (a tiny (N,) vector) rides along in VMEM.
+masked weight costs a full HBM write + read of W per step; the `col_mask`
+RHS op fuses the mask into the RHS tile load instead, so W streams
+HBM->VMEM once and the mask (a tiny (N,) vector) rides along in VMEM.
 
-Blocking: classic (bm, bn, bk) = (128·a, 128·b, 128·c) MXU-aligned tiling,
-f32 accumulation in the output block across the K grid dimension (K is the
-innermost / fastest-varying grid axis, so revisits of the same (i, j) output
-block are consecutive and the accumulator pattern is valid on TPU).
+All tiling/padding lives in `gemm_core.gemm` — this module only names the
+op configuration (kept as a module for the legacy import path).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-DEFAULT_BLOCKS = (128, 128, 128)  # bm, bn, bk
+from repro.kernels import dispatch
+from repro.kernels.gemm_core import DEFAULT_BLOCKS, col_mask, gemm
 
 
-def _masked_matmul_kernel(x_ref, w_ref, m_ref, o_ref):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    x = x_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)
-    mask = m_ref[...].astype(jnp.float32)  # (1, bn) block of column mask
-    w = w * mask  # broadcast over K rows of the tile
-    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
-        o_ref.dtype
-    )
-
-
-def masked_matmul_pallas(x, w, mask, *, blocks=DEFAULT_BLOCKS, interpret=False):
+def masked_matmul_pallas(x, w, mask, *, blocks=DEFAULT_BLOCKS,
+                         interpret=None, backend=None):
     """y[m, n] = sum_k x[m, k] * w[k, n] * mask[n].
 
     x: (M, K), w: (K, N), mask: (N,) in {0, 1} (or soft decay factors).
-    Pads every dim to block multiples; output sliced back.
     """
-    bm, bn, bk = blocks
-    M, K = x.shape
-    K2, N = w.shape
-    assert K == K2, (x.shape, w.shape)
-    bm = min(bm, max(8, M))
-    bn = min(bn, max(128, N))
-    bk = min(bk, max(128, K))
-
-    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
-    xp = jnp.pad(x, ((0, pm), (0, pk))) if (pm or pk) else x
-    wp = jnp.pad(w, ((0, pk), (0, pn))) if (pk or pn) else w
-    mp = jnp.pad(mask, (0, pn)) if pn else mask
-    mp = mp.reshape(1, -1)
-    Mp, Kp = xp.shape
-    Np = wp.shape[1]
-    grid = (Mp // bm, Np // bn, Kp // bk)
-
-    y = pl.pallas_call(
-        _masked_matmul_kernel,
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        interpret=interpret,
-    )(xp, wp, mp)
-    return y[:M, :N].astype(x.dtype)
+    return gemm(x, w, (col_mask(mask),), blocks=blocks,
+                backend=dispatch.resolve(backend, interpret))

@@ -1,74 +1,31 @@
-"""Quantized-weight matmul Pallas kernel (serving path).
+"""Quantized-weight matmul (serving path): a thin epilogue config.
 
 `construct_subnet()` exports integer weight codes + per-column scales. At
 serving time the memory-bound cost of a decode-step matmul is dominated by
-streaming W from HBM; storing W as int8 cuts that traffic 2x vs bf16 / 4x vs
-f32. This kernel streams int8 codes HBM->VMEM, dequantizes *inside* VMEM
-(codes * scale), and feeds the MXU at f32 accumulation.
+streaming W from HBM; storing W as int8 cuts that traffic 2x vs bf16 / 4x
+vs f32. The `dequant` RHS op streams int codes HBM->VMEM, dequantizes
+*inside* VMEM (codes * scale), and feeds the MXU at f32 accumulation.
 
 This is the TPU-native adaptation of the paper's deployment claim (BOPs
 reduction -> real speedups): on GPU one would use INT8 tensor cores; on TPU
 v5e the MXU natively multiplies bf16, so the win is realized as HBM
 bandwidth reduction — exactly the term that dominates decode rooflines.
+
+All tiling/padding lives in `gemm_core.gemm` — this module only names the
+op configuration (kept as a module for the legacy import path).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-DEFAULT_BLOCKS = (128, 128, 128)
-
-
-def _quant_matmul_kernel(x_ref, c_ref, s_ref, o_ref):
-    k = pl.program_id(2)
-
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    x = x_ref[...].astype(jnp.float32)
-    codes = c_ref[...].astype(jnp.float32)   # int8 -> f32 in VMEM
-    scale = s_ref[...].astype(jnp.float32)   # (1, bn)
-    w = codes * scale
-    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
-        o_ref.dtype
-    )
+from repro.kernels import dispatch
+from repro.kernels.gemm_core import DEFAULT_BLOCKS, dequant, gemm
 
 
 def quant_matmul_pallas(x, codes, scale, *, blocks=DEFAULT_BLOCKS,
-                        interpret=False):
+                        interpret=None, backend=None):
     """y = x @ (codes * scale[None, :]).
 
-    x: (M, K) float; codes: (K, N) int8/int32; scale: (N,) f32.
+    x: (M, K) float; codes: (K, N) int8/int16/int32; scale: (N,) f32.
     """
-    bm, bn, bk = blocks
-    M, K = x.shape
-    K2, N = codes.shape
-    assert K == K2
-    bm = min(bm, max(8, M))
-    bn = min(bn, max(128, N))
-    bk = min(bk, max(128, K))
-
-    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
-    xp = jnp.pad(x, ((0, pm), (0, pk))) if (pm or pk) else x
-    cp = jnp.pad(codes, ((0, pk), (0, pn))) if (pk or pn) else codes
-    sp = jnp.pad(scale, (0, pn)) if pn else scale
-    sp = sp.reshape(1, -1)
-    Mp, Kp = xp.shape
-    Np = cp.shape[1]
-    grid = (Mp // bm, Np // bn, Kp // bk)
-
-    y = pl.pallas_call(
-        _quant_matmul_kernel,
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        interpret=interpret,
-    )(xp, cp, sp)
-    return y[:M, :N].astype(x.dtype)
+    return gemm(x, codes, (dequant(scale),), blocks=blocks,
+                backend=dispatch.resolve(backend, interpret),
+                out_dtype=x.dtype)

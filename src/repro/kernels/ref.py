@@ -48,10 +48,23 @@ def fake_quant_bwd_ref(x, d, q_m, t, g):
     return dx, dd, dqm, dt
 
 
+def matmul_ref(x, w):
+    """Plain dense y = x @ w at f32 accumulation."""
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
 def masked_matmul_ref(x, w, mask):
     """y = x @ (w * mask[None, :]) — structured column (group) masking."""
     w32 = w.astype(jnp.float32) * mask.astype(jnp.float32)[None, :]
     return (x.astype(jnp.float32) @ w32).astype(x.dtype)
+
+
+def fq_matmul_ref(x, w, d, q_m, t, mask=None):
+    """y = x @ (fake_quant(w) * mask) — the fused GETA joint-stage forward."""
+    wq = fake_quant_fwd_ref(w, d, q_m, t).astype(jnp.float32)
+    if mask is not None:
+        wq = wq * mask.astype(jnp.float32)[None, :]
+    return (x.astype(jnp.float32) @ wq).astype(x.dtype)
 
 
 def quant_matmul_ref(x, codes, scale):

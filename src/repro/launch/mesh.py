@@ -3,21 +3,41 @@
 A FUNCTION, not a module constant — importing this module never touches JAX
 device state, so tests/benches keep their 1-CPU view and only dryrun.py
 (which sets XLA_FLAGS first) sees 512 host devices.
+
+`make_mesh` is the version-compatible entry point: newer JAX grows an
+`axis_types=` kwarg (explicit-sharding work) whose Auto value matches the
+older default — pass it when supported, omit it when not.
 """
 from __future__ import annotations
 
 import jax
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types across JAX versions."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def abstract_mesh(shape, axes):
+    """jax.sharding.AbstractMesh across the signature change: newer JAX
+    takes (axis_sizes, axis_names); older takes ((name, size), ...) pairs."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever devices exist (CPU smoke/tests): a 1D data mesh."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n, 1), ("data", "model"))

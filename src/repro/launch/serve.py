@@ -1,8 +1,18 @@
 """Serving driver: batched KV-cache decode of a (compressed) LM.
 
+Two weight paths:
+  default       — dense params; weight-quant sites applied as fake-quant
+                  (QAT numerics, f32/bf16 weights in HBM).
+  --compressed  — the deployment path: projection weights are replaced by a
+                  `Subnet`'s integer codes + scales (`core.subnet`), and
+                  every routed matmul decodes them through the quant-dequant
+                  epilogue on the shared GEMM core (int8 streams HBM->VMEM,
+                  `codes * scale` inside VMEM). This is the paper's BOPs
+                  claim actually executed, not just counted.
+
 Reduced-scale smoke (runs here):
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
-      --batch 4 --prompt-len 16 --gen 32
+      --batch 4 --prompt-len 16 --gen 32 [--compressed]
 """
 from __future__ import annotations
 
@@ -13,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
+from repro.core.subnet import compress_lm, residual_qparams, servable_params
 from repro.data.synthetic import batch_for
 from repro.models.transformer import LM
 
@@ -33,11 +44,30 @@ def make_serve_step(lm: LM):
 
 def serve_loop(arch: str, smoke: bool, batch: int, prompt_len: int,
                gen: int, seed: int = 0, quantized: bool = True,
-               verbose: bool = True):
+               compressed: bool = False, verbose: bool = True,
+               stats: dict | None = None):
+    """Decode `gen` tokens after a sequential prefill; returns the token
+    matrix. If `stats` is given it receives decode-only timing (the
+    prefill warms the jit, so compile/init never pollute it)."""
     cfg = get_arch(arch, smoke=smoke)
     lm = LM(cfg)
     params, _ = lm.init(jax.random.PRNGKey(seed))
-    qparams = lm.init_qparams(params, bits_init=8.0) if quantized else None
+    qparams = lm.init_qparams(params, bits_init=8.0) \
+        if (quantized or compressed) else None
+    if compressed:
+        subnet = compress_lm(lm, params, qparams)
+        if verbose:
+            m = subnet.meta
+            print(f"{arch}: compressed {m['n_sites']} sites to "
+                  f"{m['mean_bits']:.1f} mean bits "
+                  f"({m['weight_bytes_dense']/2**20:.1f} MiB -> "
+                  f"{m['weight_bytes_compressed']/2**20:.1f} MiB)")
+        params = servable_params(subnet)
+        # routed weights are integer codes now; non-routed sites (head, MoE
+        # einsums) keep their fake-quant so numerics match the dense QAT
+        # path. --compressed implies quantization: a half-quantized model
+        # (codes + unquantized head) would match neither baseline.
+        qparams = residual_qparams(subnet, qparams)
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     caches = lm.init_cache(batch, prompt_len + gen, dtype=dt)
     step = jax.jit(make_serve_step(lm))
@@ -60,8 +90,12 @@ def serve_loop(arch: str, smoke: bool, batch: int, prompt_len: int,
     jax.block_until_ready(out[-1])
     dt_s = time.time() - t0
     toks = batch * (gen - 1)
+    if stats is not None:
+        stats.update(decode_s=dt_s, tokens=toks,
+                     tok_per_s=toks / max(dt_s, 1e-9))
     if verbose:
-        print(f"{arch}: generated {toks} tokens in {dt_s:.2f}s "
+        mode = "compressed" if compressed else "dense"
+        print(f"{arch} [{mode}]: generated {toks} tokens in {dt_s:.2f}s "
               f"({toks/max(dt_s,1e-9):.1f} tok/s, batch={batch})")
     seq = jnp.concatenate(out, axis=1)
     return seq
@@ -77,9 +111,13 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--no-quant", dest="quantized", action="store_false",
                     default=True)
+    ap.add_argument("--compressed", action="store_true", default=False,
+                    help="decode from Subnet int codes via the quant-dequant "
+                         "GEMM epilogue instead of dense params (implies "
+                         "quantization; overrides --no-quant)")
     args = ap.parse_args()
     serve_loop(args.arch, args.smoke, args.batch, args.prompt_len, args.gen,
-               quantized=args.quantized)
+               quantized=args.quantized, compressed=args.compressed)
 
 
 if __name__ == "__main__":

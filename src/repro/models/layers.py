@@ -22,8 +22,28 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.quant import QuantParams, fake_quant
+from repro.kernels import ops as Kops
 
 Dtype = Any
+
+# Route Dense/attention projections through the kernel dispatch layer
+# (repro.kernels.dispatch: pallas-tpu on TPU, xla-ref elsewhere, per-call
+# override). Flag-gated, default on; `set_kernel_dispatch(False)` restores
+# the plain `x @ qw(...)` composition. See DESIGN.md §4.
+_KERNEL_DISPATCH = {"enabled": True}
+
+# Components whose 2-D weights execute through `dense_proj` (and therefore
+# can consume `<name>.codes` / fuse their `.wq` quantizer into the GEMM).
+# Single source of truth for transformer._prequantize and core.subnet.
+ROUTED_COMPONENTS = ("attn", "mlp", "mamba", "rwkv", "shared")
+
+
+def set_kernel_dispatch(enabled: bool) -> None:
+    _KERNEL_DISPATCH["enabled"] = bool(enabled)
+
+
+def kernel_dispatch_enabled() -> bool:
+    return _KERNEL_DISPATCH["enabled"]
 
 # Optional NamedSharding for decode attention scores (B, KV, g, 1, S).
 # When the KV cache is d_head-sharded (GQA kv-heads don't divide the model
@@ -54,6 +74,61 @@ def qa(x: jax.Array, qparams: Optional[dict], site: str) -> jax.Array:
         qp: QuantParams = qparams[site]
         x = fake_quant(x, qp.d, qp.q_m, qp.t)
     return x
+
+
+def dense_proj(x: jax.Array, lp: dict, qp: Optional[dict], name: str, *,
+               mask: Optional[jax.Array] = None,
+               backend: Optional[str] = None) -> jax.Array:
+    """Dense projection x @ (fake_quant(w) * mask), kernel-dispatch routed.
+
+    One entry point for every 2-D weight projection:
+    - dense weight, no quant site      -> matmul_op
+    - dense weight + weight-quant site -> fq_matmul_op (fused fake-quant
+      epilogue: one HBM pass of W instead of quantize -> matmul)
+    - + column mask (GETA joint stage) -> fq_masked_matmul_op /
+      masked_matmul_op (mask fused into the RHS tile load)
+    - int codes (`<name>.codes` / `<name>.scale` from a compressed Subnet)
+      -> quant_matmul_op (dequant inside VMEM; the serving path)
+
+    A column mask may also ride the param dict as `<name>.colmask` so it
+    stacks over the layer axis and scans with the block body.
+    """
+    codes = lp.get(name + ".codes")
+    if mask is None:
+        mask = lp.get(name + ".colmask")
+    site = name + ".wq"
+    qpw: Optional[QuantParams] = qp.get(site) if qp is not None else None
+
+    if codes is not None:
+        scale = jnp.asarray(lp[name + ".scale"], jnp.float32)
+        if scale.ndim == 0:
+            scale = jnp.broadcast_to(scale, (codes.shape[-1],))
+        x2 = x.reshape(-1, x.shape[-1])
+        y = Kops.quant_matmul_op(x2, codes, scale, backend=backend)
+        return y.reshape(*x.shape[:-1], codes.shape[-1])
+
+    w = lp[name]
+    if not kernel_dispatch_enabled() or w.ndim != 2 \
+            or (qpw is None and mask is None):
+        # plain dense (or flag off): XLA's native dot is the fastest
+        # correct path and — unlike an opaque pallas_call — partitions
+        # under GSPMD. The kernels only earn their keep when there is an
+        # epilogue to fuse.
+        if qpw is not None:
+            w = fake_quant(w, qpw.d, qpw.q_m, qpw.t)
+        if mask is not None:
+            w = w * mask.astype(w.dtype)[None, :]
+        return x @ w
+
+    x2 = x.reshape(-1, x.shape[-1])
+    if qpw is not None and mask is not None:
+        y = Kops.fq_masked_matmul_op(x2, w, mask, qpw.d, qpw.q_m, qpw.t,
+                                     backend=backend)
+    elif qpw is not None:
+        y = Kops.fq_matmul_op(x2, w, qpw.d, qpw.q_m, qpw.t, backend=backend)
+    else:
+        y = Kops.masked_matmul_op(x2, w, mask, backend=backend)
+    return y.reshape(*x.shape[:-1], w.shape[-1])
 
 
 # ------------------------------------------------------------------ norms
@@ -227,9 +302,9 @@ def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
     write_pos) for decode. Returns (out, new_cache)."""
     B, S, D = x.shape
     H, KVh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
-    q = x @ qw(lp, qp, f"{prefix}.wq")
-    k = x @ qw(lp, qp, f"{prefix}.wk")
-    v = x @ qw(lp, qp, f"{prefix}.wv")
+    q = dense_proj(x, lp, qp, f"{prefix}.wq")
+    k = dense_proj(x, lp, qp, f"{prefix}.wk")
+    v = dense_proj(x, lp, qp, f"{prefix}.wv")
     if cfg.qkv_bias:
         q = q + lp[f"{prefix}.bq"]
         k = k + lp[f"{prefix}.bk"]
@@ -272,7 +347,7 @@ def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
         out = attention(q, k, v, cfg, window=window, q_offset=q_offset)
     out = out.reshape(B, S, H * dh)
     out = qa(out, qp, f"{prefix}.attn_out.aq")
-    return out @ qw(lp, qp, f"{prefix}.wo"), new_cache
+    return dense_proj(out, lp, qp, f"{prefix}.wo"), new_cache
 
 
 # -------------------------------------------------------------------- mlp
@@ -298,11 +373,11 @@ def init_mlp(key, cfg: ModelConfig, prefix: str, n_layers: int, dtype,
 
 def mlp_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
               prefix: str):
-    g = x @ qw(lp, qp, f"{prefix}.w_gate")
-    u = x @ qw(lp, qp, f"{prefix}.w_up")
+    g = dense_proj(x, lp, qp, f"{prefix}.w_gate")
+    u = dense_proj(x, lp, qp, f"{prefix}.w_up")
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
     h = qa(h, qp, f"{prefix}.mlp_act.aq")
-    return h @ qw(lp, qp, f"{prefix}.w_down")
+    return dense_proj(h, lp, qp, f"{prefix}.w_down")
 
 
 # -------------------------------------------------------------------- moe
@@ -472,8 +547,8 @@ def mamba_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
     N = mc.d_state
     Kc = mc.d_conv
 
-    xi = x @ qw(lp, qp, f"{prefix}.in_proj_x")   # (B, S, Di)
-    z = x @ qw(lp, qp, f"{prefix}.in_proj_z")
+    xi = dense_proj(x, lp, qp, f"{prefix}.in_proj_x")   # (B, S, Di)
+    z = dense_proj(x, lp, qp, f"{prefix}.in_proj_z")
 
     conv_w = lp[f"{prefix}.conv_w"].astype(jnp.float32)   # (K, Di)
     if state is None:
@@ -488,11 +563,11 @@ def mamba_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
              for i in range(Kc))
     xc = jax.nn.silu(xc).astype(x.dtype)
 
-    proj = xc @ qw(lp, qp, f"{prefix}.x_proj")
+    proj = dense_proj(xc, lp, qp, f"{prefix}.x_proj")
     dtr = (cfg.mamba.dt_rank or D // 16)
     dt_low, Bc, Cc = jnp.split(proj, [dtr, dtr + N], axis=-1)
     dt = jax.nn.softplus(
-        (dt_low @ qw(lp, qp, f"{prefix}.dt_proj")).astype(jnp.float32)
+        dense_proj(dt_low, lp, qp, f"{prefix}.dt_proj").astype(jnp.float32)
         + lp[f"{prefix}.dt_bias"].astype(jnp.float32))     # (B, S, Di)
     A = -jnp.exp(lp[f"{prefix}.A_log"].astype(jnp.float32))  # (Di, N)
 
@@ -503,7 +578,7 @@ def mamba_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
         chunk=mc.chunk)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
     y = qa(y, qp, f"{prefix}.mamba_out.aq")
-    out = y @ qw(lp, qp, f"{prefix}.out_proj")
+    out = dense_proj(y, lp, qp, f"{prefix}.out_proj")
     return out, (h_last, new_conv)
 
 
@@ -629,15 +704,15 @@ def rwkv_timemix_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
     def mixed(i):
         return (x32 + dx * mu[i]).astype(x.dtype)
 
-    r = (mixed(0) @ qw(lp, qp, f"{prefix}.wr")).reshape(B, S, H, dh)
-    k = (mixed(1) @ qw(lp, qp, f"{prefix}.wk")).reshape(B, S, H, dh)
-    v = (mixed(2) @ qw(lp, qp, f"{prefix}.wv")).reshape(B, S, H, dh)
-    g = jax.nn.silu((mixed(3) @ qw(lp, qp, f"{prefix}.wg"))
+    r = dense_proj(mixed(0), lp, qp, f"{prefix}.wr").reshape(B, S, H, dh)
+    k = dense_proj(mixed(1), lp, qp, f"{prefix}.wk").reshape(B, S, H, dh)
+    v = dense_proj(mixed(2), lp, qp, f"{prefix}.wv").reshape(B, S, H, dh)
+    g = jax.nn.silu(dense_proj(mixed(3), lp, qp, f"{prefix}.wg")
                     .astype(jnp.float32))
     # data-dependent decay (LoRA)
-    dd = jnp.tanh((mixed(4) @ qw(lp, qp, f"{prefix}.decay_w1"))
+    dd = jnp.tanh(dense_proj(mixed(4), lp, qp, f"{prefix}.decay_w1")
                   .astype(jnp.float32))
-    dd = dd @ qw(lp, qp, f"{prefix}.decay_w2").astype(jnp.float32)
+    dd = dense_proj(dd, lp, qp, f"{prefix}.decay_w2").astype(jnp.float32)
     logw = -jnp.exp(jnp.clip(
         lp[f"{prefix}.decay_w0"].astype(jnp.float32) + dd, -8.0, 4.0))
     w = jnp.exp(logw).reshape(B, S, H, dh)
@@ -651,7 +726,7 @@ def rwkv_timemix_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
                         H, cfg.norm_eps)
     y = (y.astype(jnp.float32) * g).astype(x.dtype)
     y = qa(y, qp, f"{prefix}.tm_out.aq")
-    out = y @ qw(lp, qp, f"{prefix}.wo")
+    out = dense_proj(y, lp, qp, f"{prefix}.wo")
     return out, (x[:, -1].astype(jnp.float32), s_last)
 
 
@@ -664,11 +739,11 @@ def rwkv_chanmix_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
     x32 = x.astype(jnp.float32)
     xk = (x32 + dx * mu[0]).astype(x.dtype)
     xr = (x32 + dx * mu[1]).astype(x.dtype)
-    k = jnp.square(jax.nn.relu((xk @ qw(lp, qp, f"{prefix}.cm_k"))
+    k = jnp.square(jax.nn.relu(dense_proj(xk, lp, qp, f"{prefix}.cm_k")
                                .astype(jnp.float32))).astype(x.dtype)
     k = qa(k, qp, f"{prefix}.cm_act.aq")
-    val = k @ qw(lp, qp, f"{prefix}.cm_v")
-    r = jax.nn.sigmoid((xr @ qw(lp, qp, f"{prefix}.cm_r"))
+    val = dense_proj(k, lp, qp, f"{prefix}.cm_v")
+    r = jax.nn.sigmoid(dense_proj(xr, lp, qp, f"{prefix}.cm_r")
                        .astype(jnp.float32))
     out = (val.astype(jnp.float32) * r).astype(x.dtype)
     return out, x[:, -1].astype(jnp.float32)

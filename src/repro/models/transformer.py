@@ -7,9 +7,18 @@ a single lax.scan over n_blocks whose body unrolls the p sublayers. This
 keeps the HLO small (compile time ~seconds at 512 devices) while supporting
 Jamba-style 1:7 interleave and MoE-every-2.
 
-Weight quantization for stacked tensors is applied *outside* the scan (one
-fused fake-quant per stack, per-stack (d, q_m, t) granularity — see
-DESIGN.md §2.2); activation quantizers apply inside the block body.
+Weight quantization keeps per-stack (d, q_m, t) granularity (DESIGN.md
+§2.2). Sites on projections routed through `layers.dense_proj` fuse into
+the GEMM's RHS tile load inside the block body (no quantized stack is ever
+materialized); the rest (einsum weights, head/embed) are fake-quanted once
+per stack *outside* the scan. Activation quantizers apply inside the body.
+
+Dense/attention projections route through the kernel dispatch layer
+(`repro.kernels.dispatch`, DESIGN.md §4) via `layers.dense_proj`. The same
+entry point consumes compressed Subnet weights: a param dict may replace a
+2-D weight `<name>` with `<name>.codes` (int8/int16 codes, scan-stacked
+like the dense tensor) + `<name>.scale`, and the block body then decodes
+through the quant-dequant GEMM epilogue — the `--compressed` serving path.
 """
 from __future__ import annotations
 
@@ -213,16 +222,36 @@ class LM:
                 qp[site] = init_quant_params(q_m=4.0, bits=bits_init)
         return qp
 
+    # Stacked 2-D projections of these components run through
+    # `layers.dense_proj` inside the block body — their weight quantizer
+    # fuses into the GEMM's RHS tile load (`fq_matmul_op`), so the stack
+    # never materializes a quantized copy in HBM. Per-stack (d, q_m, t)
+    # granularity is unchanged: the same scalars apply to every layer
+    # slice (elementwise op commutes with the scan slicing).
+    _FUSED_QAT_COMPONENTS = Lyr.ROUTED_COMPONENTS
+
+    def _fused_qat_site(self, name: str, w) -> bool:
+        parts = name.split(".")
+        return (Lyr.kernel_dispatch_enabled() and name.startswith("blocks.")
+                and len(parts) >= 3
+                and parts[-2] in self._FUSED_QAT_COMPONENTS and w.ndim == 3)
+
     def _prequantize(self, params: dict, qparams: Optional[dict]
                      ) -> tuple[dict, Optional[dict]]:
-        """Apply weight fake-quant once per stack (outside the layer scan);
-        returns (params with quantized weights, act-only qparams)."""
+        """Split weight quantizers into fused-in-body sites (routed 2-D
+        projections, applied inside the GEMM epilogue by `dense_proj`) and
+        prequantized stacks (einsum weights, head/embed — fake-quanted once
+        outside the layer scan). Returns (params, body qparams)."""
         if qparams is None:
             return params, None
         out = dict(params)
+        fused_q: dict = {}
         for name in self.quant_weight_names():
             site = name + ".wq"
             if name in out and site in qparams:
+                if self._fused_qat_site(name, out[name]):
+                    fused_q[site] = qparams[site]
+                    continue
                 q = qparams[site]
                 w = fake_quant(out[name], q.d, q.q_m, q.t)
                 if self.param_shardings is not None \
@@ -230,8 +259,9 @@ class LM:
                     w = jax.lax.with_sharding_constraint(
                         w, self.param_shardings[name])
                 out[name] = w
-        act_q = {k: v for k, v in qparams.items() if k.endswith(".aq")}
-        return out, (act_q or None)
+        body_q = {k: v for k, v in qparams.items() if k.endswith(".aq")}
+        body_q.update(fused_q)
+        return out, (body_q or None)
 
     # -------------------------------------------------------------- forward
     def _embed_tokens(self, params, tokens):
@@ -247,12 +277,12 @@ class LM:
         cfg = self.cfg
         if cfg.tie_embeddings and not cfg.num_codebooks:
             return h @ params["embed"].T
-        return h @ params["head"]
+        return Lyr.dense_proj(h, params, None, "head")
 
     def _block_params(self, params: dict) -> dict:
         return {k: v for k, v in params.items() if k.startswith("blocks.")}
 
-    def _body(self, qp_act, rope, window_rope=None):
+    def _body(self, qp_body, rope, window_rope=None):
         cfg = self.cfg
 
         def body(x, lp):
@@ -263,24 +293,24 @@ class LM:
                 if sub.mixer == "attn":
                     win = cfg.window if cfg.family == "hybrid" else cfg.window
                     mix, _ = Lyr.attn_apply(
-                        lp, qp_act, cfg, h, rope=rope, window=win,
+                        lp, qp_body, cfg, h, rope=rope, window=win,
                         prefix=f"{pre}.attn")
                 elif sub.mixer == "mamba":
-                    mix, _ = Lyr.mamba_apply(lp, qp_act, cfg, h,
+                    mix, _ = Lyr.mamba_apply(lp, qp_body, cfg, h,
                                              prefix=f"{pre}.mamba")
                 else:
-                    mix, _ = Lyr.rwkv_timemix_apply(lp, qp_act, cfg, h,
+                    mix, _ = Lyr.rwkv_timemix_apply(lp, qp_body, cfg, h,
                                                     prefix=f"{pre}.rwkv")
                 x = x + mix
                 if sub.ffn == "none":
                     continue
                 h2 = Lyr.rmsnorm(x, lp[f"{pre}.norm2"], cfg.norm_eps)
                 if sub.ffn == "mlp":
-                    f = Lyr.mlp_apply(lp, qp_act, cfg, h2, prefix=f"{pre}.mlp")
+                    f = Lyr.mlp_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.mlp")
                 elif sub.ffn == "moe":
-                    f = Lyr.moe_apply(lp, qp_act, cfg, h2, prefix=f"{pre}.moe")
+                    f = Lyr.moe_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.moe")
                 else:
-                    f, _ = Lyr.rwkv_chanmix_apply(lp, qp_act, cfg, h2,
+                    f, _ = Lyr.rwkv_chanmix_apply(lp, qp_body, cfg, h2,
                                                   prefix=f"{pre}.rwkv")
                 x = x + f
             return x, None
@@ -292,14 +322,14 @@ class LM:
         """tokens: (B, S[, n_codebooks]); vision_embeds: (B, P, D) for vlm.
         Returns logits (B, S_total, ...)."""
         cfg = self.cfg
-        params, qp_act = self._prequantize(params, qparams)
+        params, qp_body = self._prequantize(params, qparams)
         x = self._embed_tokens(params, tokens)
         if cfg.vision_patches and vision_embeds is not None:
             x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
         x = self._constrain(x)
         S = x.shape[1]
         rope = Lyr.rope_tables(S, cfg.d_head, cfg.rope_theta)
-        body = self._body(qp_act, rope)
+        body = self._body(qp_body, rope)
         if cfg.remat:
             # full remat of the block body: only the per-layer residual
             # stream survives to the backward (measured 2x temp reduction
@@ -381,7 +411,7 @@ class LM:
         """One-token decode. token: (B, 1[, n_codebooks]); pos: scalar.
         Returns (logits, new_caches)."""
         cfg = self.cfg
-        params, qp_act = self._prequantize(params, qparams)
+        params, qp_body = self._prequantize(params, qparams)
         x = self._embed_tokens(params, token)
         rope = Lyr.rope_tables(1, cfg.d_head, cfg.rope_theta, offset=0)
         # rope at absolute position `pos`
@@ -400,18 +430,18 @@ class LM:
                 h = Lyr.rmsnorm(x, lp[f"{pre}.norm1"], cfg.norm_eps)
                 if sub.mixer == "attn":
                     mix, nc = Lyr.attn_apply(
-                        lp, qp_act, cfg, h, rope=rope, window=cfg.window,
+                        lp, qp_body, cfg, h, rope=rope, window=cfg.window,
                         prefix=f"{pre}.attn",
                         cache=(cc[f"{pre}.k"], cc[f"{pre}.v"], pos))
                     new_c[f"{pre}.k"], new_c[f"{pre}.v"], _ = nc
                 elif sub.mixer == "mamba":
                     mix, ns = Lyr.mamba_apply(
-                        lp, qp_act, cfg, h, prefix=f"{pre}.mamba",
+                        lp, qp_body, cfg, h, prefix=f"{pre}.mamba",
                         state=(cc[f"{pre}.h"], cc[f"{pre}.conv"]))
                     new_c[f"{pre}.h"], new_c[f"{pre}.conv"] = ns
                 else:
                     mix, ns = Lyr.rwkv_timemix_apply(
-                        lp, qp_act, cfg, h, prefix=f"{pre}.rwkv",
+                        lp, qp_body, cfg, h, prefix=f"{pre}.rwkv",
                         state=(cc[f"{pre}.tm_shift"], cc[f"{pre}.wkv"]))
                     new_c[f"{pre}.tm_shift"], new_c[f"{pre}.wkv"] = ns
                 x = x + mix
@@ -419,12 +449,12 @@ class LM:
                     continue
                 h2 = Lyr.rmsnorm(x, lp[f"{pre}.norm2"], cfg.norm_eps)
                 if sub.ffn == "mlp":
-                    f = Lyr.mlp_apply(lp, qp_act, cfg, h2, prefix=f"{pre}.mlp")
+                    f = Lyr.mlp_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.mlp")
                 elif sub.ffn == "moe":
-                    f = Lyr.moe_apply(lp, qp_act, cfg, h2, prefix=f"{pre}.moe")
+                    f = Lyr.moe_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.moe")
                 else:
                     f, ns = Lyr.rwkv_chanmix_apply(
-                        lp, qp_act, cfg, h2, prefix=f"{pre}.rwkv",
+                        lp, qp_body, cfg, h2, prefix=f"{pre}.rwkv",
                         state=cc[f"{pre}.cm_shift"])
                     new_c[f"{pre}.cm_shift"] = ns
                 x = x + f

@@ -11,13 +11,13 @@ from repro.core.saliency import SaliencyConfig, global_redundancy_partition
 from repro.distributed.collectives import (_dequantize_blockwise,
                                            _quantize_blockwise)
 from repro.distributed.sharding import batch_spec, make_plan
+from repro.launch.mesh import abstract_mesh, make_mesh
 from repro.models.cnn import CNN, VGG7
 
 
 def _mesh():
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n, 1), ("data", "model"))
 
 
 def test_sharding_plan_divisibility_fallback():
@@ -29,9 +29,8 @@ def test_sharding_plan_divisibility_fallback():
 
 
 def test_sharding_plan_records_fallbacks():
-    import jax.sharding as jsh
     # fake a mesh-like object with a model axis of 16 via abstract mesh
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     plan = make_plan(mesh)
     spec = plan.spec_for("w", ("embed", "kv_heads"), (64, 24))
     # 24 % 16 != 0 -> fallback recorded, axis replicated
@@ -40,14 +39,14 @@ def test_sharding_plan_records_fallbacks():
 
 
 def test_fsdp_rules():
-    mesh = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     plan = make_plan(mesh, fsdp=True)
     spec = plan.spec_for("w", ("embed", "mlp"), (8192, 32768))
     assert spec == P(("pod", "data"), "model")
 
 
 def test_arch_overrides_respected():
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     plan = make_plan(mesh, overrides={"fsdp": True, "experts_axis": None,
                                       "expert_mlp_axis": "model",
                                       "base_optimizer": "momentum"})
@@ -57,7 +56,7 @@ def test_arch_overrides_respected():
 
 
 def test_batch_spec_sp():
-    mesh = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     assert batch_spec(mesh) == P(("pod", "data"))
     assert batch_spec(mesh, shard_seq=True) == P(None, ("pod", "data"))
 
@@ -75,11 +74,9 @@ def test_blockwise_quantization_error_bound():
 
 def test_compressed_psum_semantics():
     """compressed all-reduce ~= psum within int8 quantization error."""
-    from jax import shard_map
-    from repro.distributed.collectives import compressed_psum
+    from repro.distributed.collectives import compressed_psum, shard_map
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("data",))
     x = jax.random.normal(jax.random.PRNGKey(1), (n, 512))
 
     def f(xs):
@@ -95,8 +92,7 @@ def test_compressed_psum_semantics():
 def test_error_feedback_accumulates():
     from repro.distributed.collectives import compressed_grad_allreduce
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("data",))
     g = {"w": jax.random.normal(jax.random.PRNGKey(2), (300,)) * 1e-3}
     mean, ef = compressed_grad_allreduce(g, mesh, axis_names=("data",))
     # sent + residual == original (error feedback identity)

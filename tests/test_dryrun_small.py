@@ -22,10 +22,10 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.launch.dryrun as DR
+from repro.launch.mesh import make_mesh
 from repro.roofline import analysis as RA
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 out = {}
 for arch, shape, step in [("internlm2-1.8b", "train_4k", "geta"),
                           ("rwkv6-3b", "decode_32k", "geta")]:

@@ -130,8 +130,9 @@ def test_elastic_reshard_restore(tmp_path):
     """Restore places arrays with NEW shardings (mesh change simulated by
     restoring with explicit single-device shardings)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     save_checkpoint(str(tmp_path), 1, tree)
     sh = {"w": NamedSharding(mesh, P("data", None))}

@@ -1,4 +1,7 @@
 """QADG (Algorithm 1) + dependency analysis + pruning-space invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")  # property-based tests; see requirements-dev.txt
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,8 @@
 """QASSO (Algorithms 2-4): stage schedule, white-box constraint
 satisfaction, descent-direction property (Prop 5.1/B.1)."""
+import pytest
+
+pytest.importorskip("hypothesis")  # property-based tests; see requirements-dev.txt
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,7 @@
 """Quantization math (paper §3): forward, STE gradients, bit-width algebra."""
+import pytest
+
+pytest.importorskip("hypothesis")  # property-based tests; see requirements-dev.txt
 import hypothesis
 import hypothesis.strategies as st
 import jax

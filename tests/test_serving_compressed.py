@@ -1,0 +1,129 @@
+"""Serving path: Subnet int-code generation -> compressed decode parity.
+
+The compressed decode executes `x @ (codes * scale)` through the
+quant-dequant GEMM epilogue; the dense QAT decode executes
+`x @ fake_quant(w)`. By Eqs (1)-(2) these are the *same* effective weight
+(codes = round(clip^t(|w|)/d) * sgn(w), x_Q = codes * d), so on an f32
+config the two decode paths must agree to numerical tolerance — the test
+that the deployment path runs the math the training path learned."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.qadg import build_qadg
+from repro.core.quant import fake_quant
+from repro.core.subnet import (compress_lm, construct_subnet,
+                               residual_qparams, servable_params)
+from repro.models.transformer import LM
+
+
+def _smoke_lm(arch="internlm2-1.8b"):
+    import dataclasses
+    cfg = get_arch(arch, smoke=True)   # 2 layers, d=128
+    if cfg.dtype != "float32":         # tight parity needs f32 weights
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    qparams = lm.init_qparams(params, bits_init=8.0)
+    return lm, params, qparams
+
+
+def _decode(lm, params, qparams, steps=4, batch=2):
+    caches = lm.init_cache(batch, 16, dtype=jnp.float32)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    outs = []
+    step = jax.jit(lm.decode_step)
+    for p in range(steps):
+        logits, caches = step(params, qparams, caches, tok, jnp.int32(p))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        outs.append(logits)
+    return jnp.concatenate(outs, axis=1)
+
+
+def test_compress_lm_decode_parity():
+    lm, params, qparams = _smoke_lm()
+    dense_logits = _decode(lm, params, qparams)
+
+    subnet = compress_lm(lm, params, qparams)
+    assert subnet.int_weights, "no sites compressed"
+    for name, codes in subnet.int_weights.items():
+        assert codes.dtype == jnp.int8, (name, codes.dtype)  # 8-bit init
+        assert name not in subnet.params
+    comp_logits = _decode(lm, servable_params(subnet),
+                          residual_qparams(subnet, qparams))
+
+    np.testing.assert_allclose(np.asarray(comp_logits),
+                               np.asarray(dense_logits), rtol=2e-4, atol=2e-4)
+    # greedy decode chooses identical tokens
+    assert np.array_equal(np.argmax(np.asarray(comp_logits), -1),
+                          np.argmax(np.asarray(dense_logits), -1))
+
+
+def test_compress_lm_codes_match_fake_quant():
+    """codes * scale reconstructs exactly the fake-quant effective weight."""
+    lm, params, qparams = _smoke_lm()
+    subnet = compress_lm(lm, params, qparams)
+    for name, codes in subnet.int_weights.items():
+        qp = qparams[name + ".wq"]
+        wq = np.asarray(fake_quant(params[name], qp.d, qp.q_m, qp.t))
+        scale = np.reshape(np.asarray(subnet.scales[name], np.float32),
+                           (-1,) + (1,) * (codes.ndim - 1))
+        rebuilt = np.asarray(codes, np.float32) * scale
+        np.testing.assert_allclose(rebuilt, wq, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "grok-1-314b"])
+def test_construct_subnet_decode_parity(arch):
+    """Full pipeline: QADG -> keep-all construct_subnet -> servable decode
+    matches the dense fake-quant decode within quantization tolerance.
+
+    grok covers the MoE case: construct_subnet quantizes the expert einsum
+    weights too, but the decode reads them dense — servable_params must not
+    emit their codes and residual_qparams must keep their fake-quant sites,
+    or compressed and dense logits silently diverge."""
+    lm, params, qparams = _smoke_lm(arch)
+    qadg = build_qadg(lm.build_graph().graph)
+    keep = qadg.space.init_masks()          # keep-all
+    subnet = construct_subnet(qadg, params, qparams, keep)
+    assert subnet.meta["sparsity"] == pytest.approx(0.0)
+    assert subnet.int_weights
+
+    sp = servable_params(subnet)
+    for name in subnet.int_weights:
+        # codes emitted iff routed; dense copy dropped alongside
+        assert (name + ".codes" in sp) == (name not in sp)
+
+    dense_logits = _decode(lm, params, qparams)
+    comp_logits = _decode(lm, sp, residual_qparams(subnet, qparams))
+    np.testing.assert_allclose(np.asarray(comp_logits),
+                               np.asarray(dense_logits), rtol=2e-4, atol=2e-4)
+
+
+def test_compress_lm_nonrouted_component_not_dropped():
+    """Asking compress_lm for a component the decode cannot execute from
+    codes (MoE einsum weights) must not drop those weights from the served
+    param dict — they stay dense and keep their fake-quant site."""
+    lm, params, qparams = _smoke_lm("grok-1-314b")
+    subnet = compress_lm(lm, params, qparams,
+                         components=("attn", "mlp", "moe"))
+    sp = servable_params(subnet)
+    moe_names = [n for n in params if ".moe." in n]
+    assert moe_names
+    for n in moe_names:
+        assert n in sp, n                       # dense copy survives
+        assert n + ".codes" not in sp
+    rq = residual_qparams(subnet, qparams)
+    assert any(s.startswith(moe_names[0].rsplit(".", 1)[0]) for s in rq)
+    # and the decode still runs
+    logits = _decode(lm, sp, rq, steps=2)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_serve_loop_compressed_smoke():
+    from repro.launch.serve import serve_loop
+    seq = serve_loop("internlm2-1.8b", smoke=True, batch=2, prompt_len=4,
+                     gen=6, compressed=True, verbose=False)
+    assert seq.shape == (2, 6)
+    assert np.all(np.asarray(seq) >= 0)
