@@ -161,6 +161,43 @@ def residual_qparams(subnet: Subnet, qparams: dict) -> Optional[dict]:
     return out or None
 
 
+def prepare_serving(lm, params: dict, qparams: Optional[dict] = None, *,
+                    quantized: bool = True, compressed: bool = False,
+                    bits_init: float = 8.0
+                    ) -> tuple[dict, Optional[dict], dict[str, Any]]:
+    """Resolve one (params, qparams) pair every serving entry point decodes
+    with — built once, reused across the prefill jit, the per-slot decode
+    jit and the cache-insertion jit (the engine never re-derives codes per
+    request). Returns (params, qparams, meta).
+
+    Dense path: weight-quant sites applied as fake-quant (QAT numerics).
+    Compressed path: routed projections replaced by a keep-all Subnet's
+    integer codes + scales (`servable_params`), with `residual_qparams`
+    keeping fake-quant sites for the weights that stay dense so both paths
+    share numerics. `compressed` implies quantization — a half-quantized
+    model would match neither baseline."""
+    if qparams is None and (quantized or compressed):
+        qparams = lm.init_qparams(params, bits_init=bits_init)
+    if not (quantized or compressed):
+        qparams = None
+    meta: dict[str, Any] = {}
+    if compressed:
+        subnet = compress_lm(lm, params, qparams)
+        meta = dict(subnet.meta)
+        params = servable_params(subnet)
+        qparams = residual_qparams(subnet, qparams)
+    return params, qparams, meta
+
+
+def compression_report(arch: str, meta: dict) -> str:
+    """One-line summary of a `prepare_serving(compressed=True)` meta dict,
+    shared by every serving CLI so the report format can't drift."""
+    return (f"{arch}: compressed {meta['n_sites']} sites to "
+            f"{meta['mean_bits']:.1f} mean bits "
+            f"({meta['weight_bytes_dense']/2**20:.1f} MiB -> "
+            f"{meta['weight_bytes_compressed']/2**20:.1f} MiB)")
+
+
 def servable_params(subnet: Subnet) -> dict:
     """Flatten a Subnet into the `dense_proj` param-dict convention.
 

@@ -1,0 +1,368 @@
+"""Continuous-batching serving engine over the compressed GEMM path.
+
+The static `serve_loop` (launch/serve.py) decodes one fixed batch in
+lockstep: every sequence shares a scalar position, prefill is a sequential
+per-token loop, and a finished sequence keeps burning decode slots until
+the longest one ends. This engine replaces all three:
+
+- **request queue + admission/eviction** — requests arrive with their own
+  prompt and token budget; a finished request frees its slot immediately
+  and the next queued request is admitted into it.
+- **slot-based (paged-lite) KV management** — the caches are one
+  `LM.init_cache(max_slots, max_seq)` arena; each slot is a cache row
+  owned by at most one request. Admission overwrites the *whole* row (the
+  prefill builds it in a fresh zeroed cache, insertion is a single
+  `dynamic_update_slice` per leaf), so no stale state survives eviction.
+- **per-slot positions** — `LM.decode_step` takes a (B,) position vector,
+  so slots at different progress share one batched decode dispatch (each
+  row ropes at its own absolute position and masks its own cache length).
+- **one-shot prefill** — `LM.prefill` fills a cache row with a single
+  full-sequence forward (GEMM-shaped (1, S) matmuls) instead of S
+  sequential decode steps.
+
+Three jitted functions run everything: `_prefill` (one per distinct
+prompt length), `_insert` (slot index is a traced scalar — one compile
+serves every slot), and `_decode` (one compile, period). Works unchanged
+on dense fake-quant params and on `--compressed` Subnet int codes —
+`core.subnet.prepare_serving` resolves the pair once and every jit closes
+over the same arrays.
+
+Smoke:
+  PYTHONPATH=src python -m repro.launch.serve --smoke --compressed \
+      --prompt-lens 12,5 --gen 8
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.subnet import compression_report, prepare_serving
+from repro.data.synthetic import batch_for
+from repro.models.transformer import LM
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    submit_t: float = 0.0
+    admit_t: float = 0.0
+    finish_t: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+
+class Engine:
+    """Continuous-batching decode over a slot arena.
+
+    Drive it either one `step()` at a time (admission + one batched decode
+    dispatch) or with `run()` until every submitted request finished.
+    """
+
+    def __init__(self, lm: LM, params: dict, qparams: Optional[dict], *,
+                 max_slots: int = 4, max_seq: int = 64):
+        cfg = lm.cfg
+        if cfg.num_codebooks or cfg.vision_patches:
+            raise ValueError("the engine serves plain token LMs; codebook "
+                             "and VLM prompts need a modality frontend — "
+                             "use the static loop (serve.py --static / "
+                             "serve_loop) for these archs")
+        self.lm = lm
+        self.params = params
+        self.qparams = qparams
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self._cache_dtype = dt
+        self.caches = lm.init_cache(max_slots, max_seq, dtype=dt)
+        # host-side slot table: position, last emitted token, owner
+        self.pos = np.zeros((max_slots,), np.int32)
+        self.last_tok = np.zeros((max_slots,), np.int32)
+        self.active: list[Optional[Request]] = [None] * max_slots
+        self.queue: deque[Request] = deque()
+        self.done: dict[int, Request] = {}
+        self._next_rid = 0
+        self.stats = {"decode_steps": 0, "decode_tokens": 0, "decode_s": 0.0,
+                      "prefills": 0, "prefill_tokens": 0, "prefill_s": 0.0,
+                      "admitted": 0, "evicted": 0}
+
+        def _prefill(params, qparams, tokens):
+            caches = lm.init_cache(1, max_seq, dtype=dt)
+            # only the last position feeds decode: skip the (S-1) x vocab
+            # head GEMM the full-logits prefill would burn per admission
+            logits, caches = lm.prefill(params, qparams, caches, tokens,
+                                        last_logit_only=True)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, caches
+
+        def _insert(caches, row, slot):
+            def ins(c, r):
+                idx = (0, slot) + (0,) * (c.ndim - 2)
+                return jax.lax.dynamic_update_slice(c, r.astype(c.dtype), idx)
+            return jax.tree_util.tree_map(ins, caches, row)
+
+        def _decode(params, qparams, caches, tok, pos):
+            logits, caches = lm.decode_step(params, qparams, caches, tok, pos)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, caches
+
+        def _decode_window(params, qparams, caches, tok, pos, k):
+            # k event-free steps fused into one dispatch: between two
+            # admission/eviction events (whose timing is count-based and
+            # known in advance) nothing on the host needs the tokens, so
+            # the loop runs on-device and syncs once per window.
+            def body(carry, _):
+                caches, tok, pos = carry
+                logits, caches = lm.decode_step(params, qparams, caches,
+                                                tok, pos)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return (caches, nxt[:, None], pos + 1), nxt
+
+            (caches, _, _), toks = jax.lax.scan(
+                body, (caches, tok, pos), None, length=k)
+            return toks, caches     # toks: (k, B)
+
+        self._prefill = jax.jit(_prefill)
+        self._insert = jax.jit(_insert)
+        self._decode = jax.jit(_decode)
+        # one compile per distinct window length (static scan trip count)
+        self._decode_window = jax.jit(_decode_window, static_argnums=(5,))
+
+    # ------------------------------------------------------------- requests
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size + max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request needs {prompt.size + max_new_tokens} cache slots, "
+                f"arena rows hold {self.max_seq}")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid=rid, prompt=prompt,
+                                  max_new_tokens=max_new_tokens,
+                                  submit_t=time.time()))
+        return rid
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    # ------------------------------------------------------------ lifecycle
+    def _admit(self) -> int:
+        """Prefill queued requests into free slots. Returns #admitted."""
+        admitted = 0
+        for slot in range(self.max_slots):
+            # retry the same slot until a request actually occupies it:
+            # a one-token request completes at admission and must not
+            # leave the slot empty while the queue still has work
+            while self.active[slot] is None and self.queue:
+                req = self.queue.popleft()
+                t0 = time.time()
+                nxt, row = self._prefill(self.params, self.qparams,
+                                         jnp.asarray(req.prompt)[None])
+                first = int(jax.block_until_ready(nxt)[0])
+                self.stats["prefill_s"] += time.time() - t0
+                self.stats["prefills"] += 1
+                self.stats["prefill_tokens"] += int(req.prompt.size)
+                self.stats["admitted"] += 1
+                req.admit_t = time.time()
+                req.tokens.append(first)
+                if req.done:    # one-token request: never occupies a slot
+                    self._finish(req)
+                    continue
+                self.caches = self._insert(self.caches, row, jnp.int32(slot))
+                self.pos[slot] = req.prompt.size
+                self.last_tok[slot] = first
+                req.slot = slot
+                self.active[slot] = req
+                admitted += 1
+        return admitted
+
+    def _finish(self, req: Request) -> None:
+        req.finish_t = time.time()
+        if req.slot >= 0:
+            self.active[req.slot] = None
+            req.slot = -1
+            self.stats["evicted"] += 1
+        self.done[req.rid] = req
+
+    def step(self) -> bool:
+        """One engine iteration: admit into free slots, then one batched
+        decode over every active slot. Returns False when idle."""
+        self._admit()
+        if self.n_active == 0:
+            return False
+        tok = jnp.asarray(self.last_tok)[:, None]
+        pos = jnp.asarray(self.pos)
+        t0 = time.time()
+        nxt, self.caches = self._decode(self.params, self.qparams,
+                                        self.caches, tok, pos)
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        self.stats["decode_s"] += time.time() - t0
+        self.stats["decode_steps"] += 1
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.stats["decode_tokens"] += 1
+            req.tokens.append(int(nxt[slot]))
+            self.last_tok[slot] = nxt[slot]
+            self.pos[slot] += 1
+            if req.done:
+                self._finish(req)
+        return True
+
+    MAX_WINDOW = 32
+
+    def warmup(self) -> None:
+        """Compile the decode dispatches on dummy inputs (slot state and
+        caches untouched) so the first timed window measures decode, not
+        XLA: every power-of-two window length (the `run()` path decodes
+        exclusively through windows; the single-step `step()` path warms
+        lazily on first use) plus the queued prompt lengths' prefills."""
+        tok = jnp.zeros((self.max_slots, 1), jnp.int32)
+        pos = jnp.zeros((self.max_slots,), jnp.int32)
+        k = 1
+        while k <= self.MAX_WINDOW:
+            toks, _ = self._decode_window(self.params, self.qparams,
+                                          self.caches, tok, pos, k)
+            jax.block_until_ready(toks)
+            k *= 2
+        # prefill compiles per distinct prompt length; the queued lengths
+        # are known, so warm them here instead of inside _admit's timing
+        for n in sorted({req.prompt.size for req in self.queue}):
+            nxt, _ = self._prefill(self.params, self.qparams,
+                                   jnp.zeros((1, int(n)), jnp.int32))
+            jax.block_until_ready(nxt)
+
+    def _window(self) -> bool:
+        """Admit, then decode up to the next scheduled eviction in one
+        fused dispatch. Token-identical to repeated `step()` — the window
+        length is the minimum remaining budget over active slots, so no
+        admission opportunity is skipped."""
+        self._admit()
+        if self.n_active == 0:
+            return False
+        k = min(req.max_new_tokens - len(req.tokens)
+                for req in self.active if req is not None)
+        # quantize to powers of two so the set of compiled window lengths
+        # is bounded (and warmable) instead of one compile per workload
+        k = min(1 << (k.bit_length() - 1), self.MAX_WINDOW)
+        tok = jnp.asarray(self.last_tok)[:, None]
+        pos = jnp.asarray(self.pos)
+        t0 = time.time()
+        toks, self.caches = self._decode_window(
+            self.params, self.qparams, self.caches, tok, pos, k)
+        toks = np.asarray(jax.block_until_ready(toks))   # (k, slots)
+        self.stats["decode_s"] += time.time() - t0
+        self.stats["decode_steps"] += k
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.stats["decode_tokens"] += k
+            req.tokens.extend(int(t) for t in toks[:, slot])
+            self.last_tok[slot] = toks[-1, slot]
+            self.pos[slot] += k
+            if req.done:
+                self._finish(req)
+        return True
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drain the queue; returns rid -> generated tokens (prompt not
+        included) for every request finished since the last drain, in rid
+        order, and releases them — a long-lived engine stays bounded and
+        a later drain never re-reports earlier batches. Decodes in
+        event-free windows (one dispatch + one host sync per window)."""
+        while self.pending:
+            if not self._window() and self.queue:
+                raise RuntimeError("queue stuck with no active slots")
+        out = {rid: np.asarray(req.tokens, np.int32)
+               for rid, req in sorted(self.done.items())}
+        self.done.clear()
+        return out
+
+    def throughput(self) -> dict[str, float]:
+        s = self.stats
+        return {
+            "decode_tok_per_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
+            "prefill_tok_per_s": (s["prefill_tokens"]
+                                  / max(s["prefill_s"], 1e-9)),
+            "slot_occupancy": (s["decode_tokens"]
+                               / max(s["decode_steps"] * self.max_slots, 1)),
+        }
+
+
+# ----------------------------------------------------------------- drivers
+def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
+                 compressed: bool = False, max_slots: int = 4,
+                 max_seq: int = 64, seed: int = 0,
+                 verbose: bool = False) -> tuple[Engine, LM]:
+    """Init an LM at `arch` scale and wrap it in an Engine."""
+    cfg = get_arch(arch, smoke=smoke)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(seed))
+    params, qparams, meta = prepare_serving(
+        lm, params, quantized=quantized, compressed=compressed)
+    if verbose and compressed:
+        print(compression_report(arch, meta))
+    return Engine(lm, params, qparams, max_slots=max_slots,
+                  max_seq=max_seq), lm
+
+
+def synthetic_prompts(cfg, prompt_lens: list[int], seed: int = 0
+                      ) -> list[np.ndarray]:
+    """Deterministic per-request prompts: request i is the first
+    prompt_lens[i] tokens of row i of the synthetic LM stream — row j of
+    `serve_loop`'s prompt matrix when lengths are equal, which is what the
+    engine-vs-static parity test leans on."""
+    mx = max(prompt_lens)
+    mat = np.asarray(batch_for(cfg, seed, 0, len(prompt_lens), mx)["tokens"])
+    return [mat[i, :n].astype(np.int32)
+            for i, n in enumerate(prompt_lens)]
+
+
+def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
+                 *, quantized: bool = True, compressed: bool = False,
+                 max_slots: int = 4, seed: int = 0, verbose: bool = True,
+                 stats: dict | None = None) -> dict[int, np.ndarray]:
+    """Submit one request per prompt length, run to drain, report tok/s."""
+    max_seq = max(prompt_lens) + gen
+    eng, lm = build_engine(arch, smoke, quantized=quantized,
+                           compressed=compressed, max_slots=max_slots,
+                           max_seq=max_seq, seed=seed, verbose=verbose)
+    for p in synthetic_prompts(lm.cfg, prompt_lens, seed):
+        eng.submit(p, gen)
+    eng.warmup()
+    out = eng.run()
+    if stats is not None:
+        stats.update(eng.stats, **eng.throughput())
+    if verbose:
+        th = eng.throughput()
+        mode = "compressed" if compressed else "dense"
+        print(f"{arch} [engine/{mode}]: {len(prompt_lens)} requests "
+              f"({', '.join(str(n) for n in prompt_lens)} prompt tokens, "
+              f"{gen} new each) on {max_slots} slots — "
+              f"{eng.stats['decode_tokens']} decode tokens in "
+              f"{eng.stats['decode_s']:.2f}s "
+              f"({th['decode_tok_per_s']:.1f} tok/s, occupancy "
+              f"{th['slot_occupancy']:.2f}); one-shot prefill "
+              f"{th['prefill_tok_per_s']:.1f} tok/s")
+    return out

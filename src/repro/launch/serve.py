@@ -1,6 +1,7 @@
-"""Serving driver: batched KV-cache decode of a (compressed) LM.
+"""Serving CLI: continuous-batching engine by default, static loop kept as
+the lockstep reference path.
 
-Two weight paths:
+Two weight paths (both modes):
   default       — dense params; weight-quant sites applied as fake-quant
                   (QAT numerics, f32/bf16 weights in HBM).
   --compressed  — the deployment path: projection weights are replaced by a
@@ -10,8 +11,21 @@ Two weight paths:
                   `codes * scale` inside VMEM). This is the paper's BOPs
                   claim actually executed, not just counted.
 
+Two execution modes:
+  engine (default) — `launch.engine.Engine`: request queue with
+                  admission/eviction, slot-based KV arena, per-slot decode
+                  positions, one-shot parallel prefill. `--prompt-lens`
+                  takes per-request prompt lengths (mixed lengths are the
+                  point).
+  --static      — the legacy `serve_loop`: one fixed batch in lockstep with
+                  a sequential per-token prefill. Kept as the engine's
+                  parity oracle (tests/test_engine.py) and the benchmark
+                  baseline.
+
 Reduced-scale smoke (runs here):
-  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+  PYTHONPATH=src python -m repro.launch.serve --smoke --compressed \
+      --prompt-lens 12,5 --gen 8
+  PYTHONPATH=src python -m repro.launch.serve --smoke --static \
       --batch 4 --prompt-len 16 --gen 32 [--compressed]
 """
 from __future__ import annotations
@@ -23,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.core.subnet import compress_lm, residual_qparams, servable_params
+from repro.core.subnet import compression_report, prepare_serving
 from repro.data.synthetic import batch_for
 from repro.models.transformer import LM
 
@@ -45,36 +59,30 @@ def make_serve_step(lm: LM):
 def serve_loop(arch: str, smoke: bool, batch: int, prompt_len: int,
                gen: int, seed: int = 0, quantized: bool = True,
                compressed: bool = False, verbose: bool = True,
-               stats: dict | None = None):
-    """Decode `gen` tokens after a sequential prefill; returns the token
-    matrix. If `stats` is given it receives decode-only timing (the
-    prefill warms the jit, so compile/init never pollute it)."""
+               stats: dict | None = None, prompts=None):
+    """Static lockstep reference: decode `gen` tokens after a *sequential*
+    per-token prefill; returns the (batch, gen) token matrix. If `stats`
+    is given it receives decode-only timing (the prefill warms the jit, so
+    compile/init never pollute it). `prompts` overrides the synthetic
+    (batch, prompt_len) prompt matrix — `tests/test_engine.py` feeds the
+    identical requests through this loop and the engine with it."""
     cfg = get_arch(arch, smoke=smoke)
     lm = LM(cfg)
     params, _ = lm.init(jax.random.PRNGKey(seed))
-    qparams = lm.init_qparams(params, bits_init=8.0) \
-        if (quantized or compressed) else None
-    if compressed:
-        subnet = compress_lm(lm, params, qparams)
-        if verbose:
-            m = subnet.meta
-            print(f"{arch}: compressed {m['n_sites']} sites to "
-                  f"{m['mean_bits']:.1f} mean bits "
-                  f"({m['weight_bytes_dense']/2**20:.1f} MiB -> "
-                  f"{m['weight_bytes_compressed']/2**20:.1f} MiB)")
-        params = servable_params(subnet)
-        # routed weights are integer codes now; non-routed sites (head, MoE
-        # einsums) keep their fake-quant so numerics match the dense QAT
-        # path. --compressed implies quantization: a half-quantized model
-        # (codes + unquantized head) would match neither baseline.
-        qparams = residual_qparams(subnet, qparams)
+    params, qparams, meta = prepare_serving(
+        lm, params, quantized=quantized, compressed=compressed)
+    if compressed and verbose:
+        print(compression_report(arch, meta))
+    if prompts is None:
+        prompts = batch_for(cfg, seed, 0, batch, prompt_len)["tokens"]
+        if cfg.family == "vlm":
+            prompts = prompts[:, :prompt_len]
+    prompt = jnp.asarray(prompts)
+    prompt_len = prompt.shape[1]   # an explicit matrix sets the length
+
     dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     caches = lm.init_cache(batch, prompt_len + gen, dtype=dt)
     step = jax.jit(make_serve_step(lm))
-
-    prompt = batch_for(cfg, seed, 0, batch, prompt_len)["tokens"]
-    if cfg.family == "vlm":
-        prompt = prompt[:, :prompt_len]
 
     # prefill via sequential decode (cache-building path)
     tok = prompt[:, :1]
@@ -95,8 +103,9 @@ def serve_loop(arch: str, smoke: bool, batch: int, prompt_len: int,
                      tok_per_s=toks / max(dt_s, 1e-9))
     if verbose:
         mode = "compressed" if compressed else "dense"
-        print(f"{arch} [{mode}]: generated {toks} tokens in {dt_s:.2f}s "
-              f"({toks/max(dt_s,1e-9):.1f} tok/s, batch={batch})")
+        print(f"{arch} [static/{mode}]: generated {toks} tokens in "
+              f"{dt_s:.2f}s ({toks/max(dt_s,1e-9):.1f} tok/s, "
+              f"batch={batch})")
     seq = jnp.concatenate(out, axis=1)
     return seq
 
@@ -106,8 +115,19 @@ def main():
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--static", action="store_true", default=False,
+                    help="legacy lockstep serve_loop instead of the "
+                         "continuous-batching engine")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static mode: lockstep batch size")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="static mode: shared prompt length")
+    ap.add_argument("--prompt-lens", default=None,
+                    help="engine mode: comma-separated per-request prompt "
+                         "lengths, e.g. 16,4,9 (default: --batch requests "
+                         "of --prompt-len each)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="engine mode: decode slots (concurrent requests)")
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--no-quant", dest="quantized", action="store_false",
                     default=True)
@@ -116,8 +136,26 @@ def main():
                          "GEMM epilogue instead of dense params (implies "
                          "quantization; overrides --no-quant)")
     args = ap.parse_args()
-    serve_loop(args.arch, args.smoke, args.batch, args.prompt_len, args.gen,
-               quantized=args.quantized, compressed=args.compressed)
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    if not args.static and (cfg.num_codebooks or cfg.vision_patches):
+        # the engine serves plain token LMs; these archs keep working
+        # through the lockstep loop exactly as before this CLI existed
+        print(f"{args.arch}: codebook/VLM prompts need a modality "
+              f"frontend — falling back to the static loop")
+        args.static = True
+    if args.static:
+        serve_loop(args.arch, args.smoke, args.batch, args.prompt_len,
+                   args.gen, quantized=args.quantized,
+                   compressed=args.compressed)
+        return
+    from repro.launch.engine import engine_serve
+    if args.prompt_lens:
+        lens = [int(x) for x in args.prompt_lens.split(",")]
+    else:
+        lens = [args.prompt_len] * args.batch
+    engine_serve(args.arch, args.smoke, lens, args.gen,
+                 quantized=args.quantized, compressed=args.compressed,
+                 max_slots=args.slots)
 
 
 if __name__ == "__main__":

@@ -162,10 +162,15 @@ def rope_tables(seq_len: int, d_head: int, theta: float,
 
 
 def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
-    """x: (B, S, H, dh); cos/sin: (S, dh/2)."""
+    """x: (B, S, H, dh); cos/sin: (S, dh/2), or (B, S, dh/2) when every
+    sequence sits at its own absolute position (per-slot decode)."""
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    c = cos[None, :, None, :]
-    s = sin[None, :, None, :]
+    if cos.ndim == 3:
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    else:
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
     return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
                            axis=-1).astype(x.dtype)
 
@@ -317,16 +322,34 @@ def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
     k = apply_rope(k, cos, sin)
 
     new_cache = None
+    if cache is not None and S > 1:
+        # one-shot prefill: write the whole prompt's K/V at positions
+        # [0, S) in a single slice update and attend causally over the
+        # prompt itself — no cache read, so a fresh (zeroed) cache row is
+        # required. Windowed layers ring-wrap per token; a one-shot write
+        # is only position-faithful while the prompt fits the ring.
+        ck, cv, pos = cache
+        assert window <= 0 or S <= ck.shape[1], (S, ck.shape[1])
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, 0, 0, 0))
+        out = attention(q, k, v, cfg, window=window, q_offset=0)
+        out = out.reshape(B, S, H * dh)
+        out = qa(out, qp, f"{prefix}.attn_out.aq")
+        return dense_proj(out, lp, qp, f"{prefix}.wo"), (ck, cv, pos + S)
     if cache is not None:
         ck, cv, pos = cache
-        # decode: append the new token at `pos` (ring for windowed layers)
+        # decode: append the new token at `pos` (ring for windowed layers).
+        # pos may be a scalar (static batch, every sequence in lockstep) or
+        # a (B,) vector (continuous batching: every slot at its own
+        # progress); both normalize to the per-row path.
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
         slot = jnp.mod(pos, ck.shape[1]) if window > 0 else pos
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, slot, 0, 0))
-        valid = jnp.arange(ck.shape[1]) <= (pos if window <= 0
-                                            else ck.shape[1] + 10**9)
+        row_upd = lambda c, u, s: jax.lax.dynamic_update_slice(
+            c, u, (s, 0, 0))
+        ck = jax.vmap(row_upd)(ck, k.astype(ck.dtype), slot)
+        cv = jax.vmap(row_upd)(cv, v.astype(cv.dtype), slot)
         k_all, v_all = ck, cv
         # attention of the single query over the cache
         g = H // KVh
@@ -337,7 +360,8 @@ def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
             scores = jax.lax.with_sharding_constraint(
                 scores, DECODE_SCORE_SHARDING)
         if window <= 0:
-            scores = jnp.where(valid[None, None, None, None], scores, -1e30)
+            valid = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]
+            scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bkgqs,bskd->bqkgd", probs,
                          v_all.astype(jnp.float32))
@@ -407,7 +431,7 @@ def init_moe(key, cfg: ModelConfig, prefix: str, n_layers: int, dtype
 
 
 def moe_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
-              prefix: str):
+              prefix: str, full_capacity: bool = False):
     """Top-k token-choice MoE, GShard-style grouped einsum dispatch.
 
     Tokens are split into G groups (one per sequence) with *per-group*
@@ -415,6 +439,12 @@ def moe_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
     linear in tokens. A global-capacity formulation is quadratic in tokens
     (measured ~1 TB/device temp on jamba train_4k) because C grows with N
     while the mask still spans all N tokens.
+
+    `full_capacity` sets C = n * K so no token is ever dropped — the
+    serving semantics. One-token decode can never overflow an expert, so a
+    one-shot prefill only matches the sequential decode loop if its
+    prompt tokens don't compete for capacity either (capacity pressure is
+    a training-time load-balancing device, not an inference behaviour).
 
     Sharding: groups ride the batch axes; annotating the dispatched
     activations with experts -> 'model' (cfg.moe.impl='alltoall') makes
@@ -429,7 +459,8 @@ def moe_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
     gate_vals, gate_idx = jax.lax.top_k(probs, K)           # (G, n, K)
     gate_vals = gate_vals / jnp.maximum(
         jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
-    C = max(int(cfg.moe.capacity_factor * n * K / E), 4)
+    C = n * K if full_capacity \
+        else max(int(cfg.moe.capacity_factor * n * K / E), 4)
 
     onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G, n, K, E)
     # position of each (token, k) within its expert's per-group queue

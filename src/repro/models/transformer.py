@@ -408,18 +408,21 @@ class LM:
 
     def decode_step(self, params: dict, qparams: Optional[dict], caches: dict,
                     token, pos):
-        """One-token decode. token: (B, 1[, n_codebooks]); pos: scalar.
+        """One-token decode. token: (B, 1[, n_codebooks]); pos: scalar
+        (static batching, every sequence in lockstep) or (B,) int vector
+        (continuous batching: each slot at its own absolute position).
         Returns (logits, new_caches)."""
         cfg = self.cfg
         params, qp_body = self._prequantize(params, qparams)
         x = self._embed_tokens(params, token)
-        rope = Lyr.rope_tables(1, cfg.d_head, cfg.rope_theta, offset=0)
-        # rope at absolute position `pos`
-        posf = jnp.asarray(pos, jnp.float32)
+        B = x.shape[0]
+        # rope at each sequence's absolute position
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+        posf = pos.astype(jnp.float32)
         freqs = cfg.rope_theta ** (-jnp.arange(0, cfg.d_head, 2,
                                                dtype=jnp.float32) / cfg.d_head)
-        ang = posf * freqs
-        rope = (jnp.cos(ang)[None], jnp.sin(ang)[None])
+        ang = posf[:, None] * freqs[None, :]
+        rope = (jnp.cos(ang)[:, None], jnp.sin(ang)[:, None])   # (B, 1, dh/2)
 
         def body(x, inp):
             lp = inp["p"]
@@ -476,6 +479,90 @@ class LM:
         if cfg.num_codebooks:
             B = logits.shape[0]
             logits = logits.reshape(B, 1, cfg.num_codebooks, cfg.vocab_padded)
+        return logits, new_caches
+
+    def prefill(self, params: dict, qparams: Optional[dict], caches: dict,
+                tokens, vision_embeds=None, last_logit_only: bool = False):
+        """One-shot parallel prefill: a single full-sequence pass that also
+        fills the decode caches — K/V rows written at positions [0, S) in
+        one slice update per layer, SSM/RWKV states left as they stand
+        after the last prompt token. Numerically equivalent to S sequential
+        `decode_step` calls but with GEMM-shaped (B, S) matmuls instead of
+        S token-by-token dispatches (the engine's admission path).
+
+        tokens: (B, S[, n_codebooks]). `caches` must be freshly initialized
+        for these sequences (rows are overwritten from position 0) and,
+        on windowed-attention configs, S must fit inside the window.
+        Returns (logits (B, S, ...), caches); `last_logit_only` projects
+        just the final position through the head (decode only feeds on
+        that one — skips an (S-1) x vocab GEMM per admission)."""
+        cfg = self.cfg
+        params, qp_body = self._prequantize(params, qparams)
+        x = self._embed_tokens(params, tokens)
+        if cfg.vision_patches and vision_embeds is not None:
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        S = x.shape[1]
+        rope = Lyr.rope_tables(S, cfg.d_head, cfg.rope_theta)
+
+        def body(x, inp):
+            lp = inp["p"]
+            cc = inp["c"]
+            new_c = {}
+            for sub in self.plan:
+                pre = f"blocks.{sub.j}"
+                h = Lyr.rmsnorm(x, lp[f"{pre}.norm1"], cfg.norm_eps)
+                if sub.mixer == "attn":
+                    mix, nc = Lyr.attn_apply(
+                        lp, qp_body, cfg, h, rope=rope, window=cfg.window,
+                        prefix=f"{pre}.attn",
+                        cache=(cc[f"{pre}.k"], cc[f"{pre}.v"],
+                               jnp.zeros((), jnp.int32)))
+                    new_c[f"{pre}.k"], new_c[f"{pre}.v"], _ = nc
+                elif sub.mixer == "mamba":
+                    mix, ns = Lyr.mamba_apply(lp, qp_body, cfg, h,
+                                              prefix=f"{pre}.mamba")
+                    new_c[f"{pre}.h"], new_c[f"{pre}.conv"] = ns
+                else:
+                    mix, ns = Lyr.rwkv_timemix_apply(lp, qp_body, cfg, h,
+                                                     prefix=f"{pre}.rwkv")
+                    new_c[f"{pre}.tm_shift"], new_c[f"{pre}.wkv"] = ns
+                x = x + mix
+                if sub.ffn == "none":
+                    continue
+                h2 = Lyr.rmsnorm(x, lp[f"{pre}.norm2"], cfg.norm_eps)
+                if sub.ffn == "mlp":
+                    f = Lyr.mlp_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.mlp")
+                elif sub.ffn == "moe":
+                    # serving semantics: prompt tokens never compete for
+                    # expert capacity (one-token decode can't overflow, so
+                    # a dropping prefill would silently diverge from it)
+                    f = Lyr.moe_apply(lp, qp_body, cfg, h2,
+                                      prefix=f"{pre}.moe", full_capacity=True)
+                else:
+                    f, ns = Lyr.rwkv_chanmix_apply(lp, qp_body, cfg, h2,
+                                                   prefix=f"{pre}.rwkv")
+                    new_c[f"{pre}.cm_shift"] = ns
+                x = x + f
+            return x, new_c
+
+        bp = self._block_params(params)
+        if self.n_blocks <= 2:
+            new_list = []
+            for i in range(self.n_blocks):
+                x, nc = body(x, {"p": {k: v[i] for k, v in bp.items()},
+                                 "c": {k: v[i] for k, v in caches.items()}})
+                new_list.append(nc)
+            new_caches = {k: jnp.stack([nc[k] for nc in new_list])
+                          for k in new_list[0]}
+        else:
+            x, new_caches = jax.lax.scan(body, x, {"p": bp, "c": caches})
+        if last_logit_only:
+            x = x[:, -1:]
+        x = Lyr.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x)
+        if cfg.num_codebooks:
+            B, St = logits.shape[:2]
+            logits = logits.reshape(B, St, cfg.num_codebooks, cfg.vocab_padded)
         return logits, new_caches
 
     # -------------------------------------------------------------- graph

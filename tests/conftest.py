@@ -1,9 +1,29 @@
+"""Suite-wide determinism: the tests must produce identical numerics on
+any host, TPU or not.
+
+- The JAX platform is pinned (default: cpu) *before* jax import so that
+  nothing downstream — `kernels.dispatch.platform_default()` included —
+  platform-sniffs its way onto a different backend between hosts. Tests
+  that exercise kernel logic select `pallas-interpret` / `xla-ref`
+  explicitly per call; an explicit `JAX_PLATFORMS` in the environment
+  still wins (that's how a TPU host opts the suite onto hardware).
+- Hypothesis runs the derandomized profile: examples are a pure function
+  of the test, not of a per-run entropy source.
+"""
 import os
 import sys
 
-# Tests must see the REAL device view (1 CPU) — never the dry-run's 512
-# placeholder devices. Guard against accidental inheritance.
-os.environ.pop("XLA_FLAGS", None) if "force_host_platform" in \
-    os.environ.get("XLA_FLAGS", "") else None
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Never inherit the dry-run's 512 fake host devices into real tests.
+if "force_host_platform" in os.environ.get("XLA_FLAGS", ""):
+    os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:
+    from hypothesis import settings
+
+    settings.register_profile("repro", derandomize=True, deadline=None)
+    settings.load_profile("repro")
+except ImportError:  # hypothesis-based tests importorskip themselves
+    pass

@@ -21,6 +21,7 @@ COMP = CompressionConfig(
     bit_reduction=2, pruning_periods=2, pruning_steps=2, cooldown_steps=2)
 
 
+@pytest.mark.slow   # ~10s/arch: jits one full GETA train step per config
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
 def test_smoke_forward_and_train_step(arch):
     cfg = get_arch(arch, smoke=True)

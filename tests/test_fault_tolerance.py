@@ -142,6 +142,7 @@ def test_elastic_reshard_restore(tmp_path):
                                np.asarray(tree["w"]))
 
 
+@pytest.mark.slow
 def test_train_loop_end_to_end_with_failure(tmp_path):
     """The real GETA train loop survives an injected node failure."""
     from repro.launch.train import train_loop

@@ -1,0 +1,189 @@
+"""Property-based QASSO invariants (hypothesis).
+
+Three structural guarantees the optimizer must hold for *any* admissible
+configuration, not just the tuned test schedule:
+
+1. PPSG projection (Alg 3) always leaves the derived bit width inside the
+   progressively-shrinking range [b_l, b_u - p*b_r] — both the pure
+   projection operator and the live projection stage of a full run.
+2. Cool-down hard-zeros exactly the redundant groups: every element
+   covered by a pruned unit is exactly 0.0, every kept unit survives with
+   nonzero mass, and the pruned-unit count is the Eq 7b target.
+3. The stage boundaries derived from `QASSOConfig` partition
+   [0, total_steps) with no gaps and no overlap.
+"""
+import types
+
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import quant as Q
+from repro.core.graph import GraphBuilder
+from repro.core.qadg import build_qadg
+from repro.core.qasso import QASSO, QASSOConfig
+from repro.optim.schedules import constant
+
+
+# ------------------------------------------------------------ 1. projection
+@given(qm=st.floats(0.05, 8.0), t=st.floats(0.2, 3.0),
+       bits0=st.floats(1.1, 28.0), period=st.integers(0, 7),
+       b_l=st.floats(2.0, 6.0), b_u=st.floats(8.0, 20.0),
+       b_r=st.floats(0.5, 3.0))
+@settings(max_examples=200)
+def test_projection_keeps_bits_in_shrinking_range(qm, t, bits0, period,
+                                                  b_l, b_u, b_r):
+    """For any quantizer state (even one far outside the range) and any
+    period p, projecting with the period-p effective upper bound lands the
+    derived bit width inside [b_l, b_u - p*b_r] (floored at b_l)."""
+    b_u_eff = max(b_u - b_r * period, b_l)
+    qp = Q.QuantParams(d=Q.step_size_for_bits(
+        jnp.float32(qm), jnp.float32(t), jnp.float32(bits0)),
+        q_m=jnp.float32(qm), t=jnp.float32(t))
+    out = Q.project_step_size(qp, b_l, b_u_eff)
+    b = float(Q.bit_width(out.d, out.q_m, out.t))
+    assert b_l - 1e-3 <= b <= b_u_eff + 1e-3, (b, b_l, b_u_eff)
+
+
+# --------------------------------------------- shared tiny QASSO problem
+def _tiny_problem(seed=0, hidden=16):
+    gb = GraphBuilder()
+    gb.input("in")
+    gb.linear("fc1", "fc1.w", out_dim=hidden)
+    gb.act("relu1")
+    gb.linear("fc2", "fc2.w", out_dim=4, non_prunable=True)
+    gb.output("out")
+    gb.attach_weight_quant("fc1", "fc1.w.wq")
+    gb.attach_weight_quant("fc2", "fc2.w.wq")
+    qadg = build_qadg(gb.graph)
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = {"fc1.w": jax.random.normal(k1, (6, hidden)) * 0.4,
+              "fc2.w": jax.random.normal(k2, (hidden, 4)) * 0.4}
+    qparams = {"fc1.w.wq": Q.init_quant_params(params["fc1.w"], bits=16.0),
+               "fc2.w.wq": Q.init_quant_params(params["fc2.w"], bits=16.0)}
+    X = jax.random.normal(k3, (32, 6))
+    Y = X @ jax.random.normal(jax.random.PRNGKey(seed + 77), (6, 4))
+
+    def loss_fn(p, q):
+        w1 = Q.fake_quant(p["fc1.w"], q["fc1.w.wq"].d, q["fc1.w.wq"].q_m,
+                          q["fc1.w.wq"].t)
+        h = jax.nn.relu(X @ w1)
+        w2 = Q.fake_quant(p["fc2.w"], q["fc2.w.wq"].d, q["fc2.w.wq"].q_m,
+                          q["fc2.w.wq"].t)
+        return jnp.mean((h @ w2 - Y) ** 2)
+
+    return qadg, params, qparams, loss_fn
+
+
+def _run_qasso(cfg, seed):
+    """Full-schedule run; returns per-step bit traces + final state."""
+    qadg, params, qparams, loss_fn = _tiny_problem(seed)
+    qasso = QASSO(qadg.space, qadg.sites, cfg, constant(5e-3))
+    state = qasso.init(params, qparams)
+
+    @jax.jit
+    def step(params, qparams, state):
+        loss, (gx, gq) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            params, qparams)
+        return qasso.update(params, qparams, gx, gq, state)
+
+    bit_trace = []
+    for i in range(cfg.total_steps):
+        params, qparams, state, metrics = step(params, qparams, state)
+        bit_trace.append({s.name: float(Q.bit_width(
+            qparams[s.name].d, qparams[s.name].q_m, qparams[s.name].t))
+            for s in qadg.sites})
+    return qadg, qasso, params, qparams, state, bit_trace
+
+
+CFG = QASSOConfig(target_sparsity=0.5, bit_lower=4, bit_upper=16,
+                  warmup_steps=4, projection_periods=3, projection_steps=4,
+                  bit_reduction=2, pruning_periods=3, pruning_steps=5,
+                  cooldown_steps=6, base_optimizer="adam", lr_quant=1e-3)
+
+
+def test_projection_stage_bits_track_schedule():
+    """White-box: after every projection-stage step of a live run, each
+    site's bits sit inside the *current period's* shrinking range."""
+    cfg = CFG
+    _, _, _, _, _, trace = _run_qasso(cfg, seed=0)
+    for i in range(cfg.warmup_end, cfg.projection_end):
+        period = (i - cfg.warmup_end) // cfg.projection_steps
+        b_u_eff = max(cfg.bit_upper - cfg.bit_reduction * (period + 1),
+                      cfg.bit_lower)
+        for site, b in trace[i].items():
+            assert cfg.bit_lower - 1e-3 <= b <= b_u_eff + 1e-3, \
+                (i, site, b, b_u_eff)
+
+
+# ------------------------------------------------------------- 2. cool-down
+@given(seed=st.integers(0, 50),
+       sparsity=st.sampled_from([0.25, 0.5, 0.75]))
+@settings(max_examples=5, deadline=None)
+def test_cooldown_hard_zeros_exactly_the_redundant_groups(seed, sparsity):
+    import dataclasses
+    cfg = dataclasses.replace(CFG, target_sparsity=sparsity)
+    qadg, qasso, params, qparams, state, _ = _run_qasso(cfg, seed)
+
+    fams = qasso.space.prunable_families()
+    n_pruned = 0
+    for fam in fams:
+        keep = np.asarray(state.keep_mask[fam.name])
+        red = np.asarray(state.redundant[fam.name])
+        # the frozen keep mask is exactly the complement of the final
+        # redundant partition — nothing extra zeroed, nothing spared
+        np.testing.assert_array_equal(keep, 1.0 - red)
+        n_pruned += int(np.sum(keep < 0.5))
+    # Eq 7b: the progressive target lands on round(K * units) (within the
+    # one-unit rounding the progressive per-period targets allow)
+    assert abs(n_pruned - sparsity * qasso.space.total_units()) <= 1 + 1e-6
+
+    fam = fams[0]
+    keep = np.asarray(state.keep_mask[fam.name])
+    pruned = np.nonzero(keep < 0.5)[0]
+    kept = np.nonzero(keep >= 0.5)[0]
+    w1 = np.asarray(params["fc1.w"])
+    w2 = np.asarray(params["fc2.w"])
+    # hard zeros, exactly on the redundant units...
+    assert np.all(w1[:, pruned] == 0.0)
+    assert np.all(w2[pruned, :] == 0.0)
+    # ...and only there: every kept unit keeps nonzero mass
+    if len(kept):
+        assert np.all(np.abs(w1[:, kept]).sum(axis=0) > 0.0)
+
+
+# ------------------------------------------------------- 3. stage partition
+@given(warm=st.integers(0, 30), pp=st.integers(1, 5), ps=st.integers(1, 20),
+       br=st.floats(0.0, 4.0), P=st.integers(1, 5), ks=st.integers(1, 20),
+       cd=st.integers(0, 30))
+@settings(max_examples=100)
+def test_stage_boundaries_partition_the_horizon(warm, pp, ps, br, P, ks, cd):
+    """stage_index carves [0, total_steps) into four consecutive intervals
+    with no gaps or overlap, for any admissible schedule (empty stages
+    allowed when a length is 0)."""
+    cfg = QASSOConfig(warmup_steps=warm, projection_periods=pp,
+                      projection_steps=ps, bit_reduction=br,
+                      pruning_periods=P, pruning_steps=ks, cooldown_steps=cd)
+    edges = [0, cfg.warmup_end, cfg.projection_end, cfg.joint_end,
+             cfg.total_steps]
+    assert edges == sorted(edges)
+    assert cfg.warmup_end - 0 == warm
+    assert cfg.projection_end - cfg.warmup_end == pp * ps
+    assert cfg.joint_end - cfg.projection_end == P * ks
+    assert cfg.total_steps - cfg.joint_end == cd
+
+    # evaluate the real (jit-compatible) stage switch over the horizon
+    shim = types.SimpleNamespace(cfg=cfg)
+    stages = np.asarray(QASSO.stage_index(shim, jnp.arange(cfg.total_steps)))
+    for s in range(4):
+        lo, hi = edges[s], edges[s + 1]
+        assert np.all(stages[lo:hi] == s), (s, lo, hi)
+    # exhaustive partition: each step is claimed by exactly one stage
+    assert stages.shape[0] == cfg.total_steps
+    assert np.all(np.diff(stages) >= 0)
