@@ -296,10 +296,72 @@ def bench_engine_continuous(fast=False):
     return {"static": static_tps, "continuous": cont_tps}
 
 
+def bench_sharded_train_scaling(fast=False):
+    """1 -> N-device GETA train-step scaling (data-parallel, deterministic
+    ordered reduction — DESIGN.md §5).
+
+    On a 1-device host this prints the single-device row only; under
+    `XLA_FLAGS=--xla_force_host_platform_device_count=N` it adds a row per
+    mesh size. Fake CPU devices share the same cores, so `us_per_step`
+    measures dispatch/partitioning overhead rather than real speedup —
+    the `per_dev_batch` column is the quantity that scales on hardware."""
+    from repro.configs import CompressionConfig, get_arch
+    from repro.data.synthetic import batch_for
+    from repro.launch.mesh import make_subset_mesh
+    from repro.launch.specs import param_specs
+    from repro.launch.train import build_geta, make_sharded_geta_train_step
+    from repro.distributed.sharding import make_plan
+    from repro.models.transformer import LM
+
+    steps = 6 if fast else 20
+    batch = 8
+    comp = CompressionConfig(
+        target_sparsity=0.25, warmup_steps=2, projection_periods=1,
+        projection_steps=2, pruning_periods=2, pruning_steps=2,
+        cooldown_steps=max(steps - 8, 2))
+    n_dev = jax.device_count()
+    sizes = sorted({1, n_dev} | ({2} if n_dev >= 2 else set()))
+    sizes = [n for n in sizes if batch % n == 0]
+    base_us = None
+    out = {}
+    for n in sizes:
+        cfg = get_arch("internlm2-1.8b", smoke=True)
+        lm = LM(cfg)
+        params, _ = lm.init(jax.random.PRNGKey(0))
+        qparams = lm.init_qparams(params, bits_init=16.0)
+        _, qasso = build_geta(lm, comp, lr=3e-3, base_optimizer="momentum")
+        qstate = qasso.init(params, qparams)
+        mesh = make_subset_mesh(n)
+        _, p_sh, _ = param_specs(lm, mesh, make_plan(mesh, fsdp=False))
+        jstep, (psh, qsh, ssh, bsh) = make_sharded_geta_train_step(
+            lm, qasso, mesh, params, qparams, param_shardings=p_sh,
+            grad_slices=n)
+        params = jax.device_put(params, psh)
+        qparams = jax.device_put(qparams, qsh)
+        qstate = jax.device_put(qstate, ssh)
+        b0 = jax.device_put(batch_for(cfg, 0, 0, batch, 16), bsh)
+        # warm the compile outside the timed loop
+        params, qparams, qstate, m = jstep(params, qparams, qstate, b0)
+        jax.block_until_ready(m["loss"])
+        t0 = time.time()
+        for i in range(1, steps):
+            b = jax.device_put(batch_for(cfg, 0, i, batch, 16), bsh)
+            params, qparams, qstate, m = jstep(params, qparams, qstate, b)
+        jax.block_until_ready(m["loss"])
+        us = (time.time() - t0) / max(steps - 1, 1) * 1e6
+        base_us = base_us or us
+        _row(f"sharded_geta_step_{n}dev", us,
+             f"devices={n};per_dev_batch={batch//n};"
+             f"rel_step_time={us/base_us:.2f};loss={float(m['loss']):.3f}")
+        out[n] = us
+    return out
+
+
 ALL = [bench_table2_resnet20, bench_table3_bert, bench_table4_vgg7,
        bench_table5_resnet56, bench_fig4a_ablation, bench_fig4b_frontier,
        bench_kernel_fake_quant, bench_kernel_fused_joint, bench_serve_decode,
-       bench_engine_prefill, bench_engine_continuous]
+       bench_engine_prefill, bench_engine_continuous,
+       bench_sharded_train_scaling]
 
 
 def main() -> None:

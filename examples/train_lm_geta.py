@@ -7,12 +7,15 @@ minutes on this CPU container; pass --hundred-m for the ~100M-param variant
 a real accelerator).
 
     PYTHONPATH=src python examples/train_lm_geta.py --steps 200
+
+Sharded (data-parallel over N devices; on a CPU host N fake XLA devices
+are forced before jax initializes — add --fsdp to shard params/opt-state):
+
+    PYTHONPATH=src python examples/train_lm_geta.py --steps 50 --devices 4
 """
 import argparse
 import dataclasses
-
-from repro.configs import CompressionConfig, get_arch
-from repro.launch.train import train_loop
+import os
 
 
 def main():
@@ -24,7 +27,39 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/geta_lm_ckpt")
     ap.add_argument("--inject-failure", type=int, default=None,
                     help="step at which to simulate a node failure")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="data-parallel mesh over N devices (CPU hosts get "
+                         "N forced XLA host devices)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="shard params + optimizer state over the data axis")
     args = ap.parse_args()
+
+    if args.devices and args.devices > 1:
+        # must precede the first jax import — jax locks the device count.
+        # Append to any existing XLA_FLAGS (setdefault would silently
+        # leave the host single-device when the user has unrelated flags
+        # exported); an explicit device-count flag in the env wins.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+
+    from repro.configs import CompressionConfig
+    from repro.launch.train import train_loop
+
+    mesh = None
+    if args.devices:
+        import jax
+
+        from repro.launch.mesh import make_subset_mesh
+        n = min(args.devices, jax.device_count())
+        if n < args.devices:
+            print(f"requested {args.devices} devices, host has "
+                  f"{jax.device_count()}; using {n}")
+        if args.batch % n != 0:
+            raise SystemExit(f"--batch {args.batch} must divide by {n}")
+        mesh = make_subset_mesh(n)
 
     arch = "internlm2-1.8b"
     if args.hundred_m:
@@ -43,7 +78,8 @@ def main():
     state, qadg, qasso, losses = train_loop(
         arch, smoke=True, steps=args.steps, batch=args.batch, seq=args.seq,
         ckpt_dir=args.ckpt_dir, comp=comp,
-        inject_failure_at=args.inject_failure)
+        inject_failure_at=args.inject_failure,
+        mesh=mesh, fsdp=args.fsdp)
     print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
           f"sparsity={float(qasso.space.sparsity(state['qstate'].keep_mask)):.2f}")
 

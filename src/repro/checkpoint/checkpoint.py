@@ -25,21 +25,6 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
-    out = {}
-    if isinstance(tree, dict):
-        for k in sorted(tree):
-            out.update(_flatten(tree[k], f"{prefix}{k}/"))
-    elif isinstance(tree, (list, tuple)):
-        for i, v in enumerate(tree):
-            out.update(_flatten(v, f"{prefix}{i}/"))
-        if not tree:
-            out[prefix + "__empty__"] = np.zeros((0,))
-    else:
-        out[prefix.rstrip("/")] = tree
-    return out
-
-
 def _to_numpy(x):
     """bf16 has no numpy dtype — store as a uint16 view + dtype tag."""
     a = np.asarray(x)
@@ -99,16 +84,43 @@ def restore_checkpoint(directory: str, example_tree: Any,
                        ) -> Optional[tuple[Any, int]]:
     """Restore into the structure of `example_tree`, placing each leaf with
     the matching entry of `shardings` (same structure, NamedSharding or
-    None). Returns (tree, step) or None if no checkpoint exists."""
+    None). Returns (tree, step) or None if no checkpoint exists.
+
+    The manifest's step / leaf-count / treedef are validated against the
+    request before any leaf is rebuilt — a structure drift (renamed param,
+    changed optimizer) raises with both structures named instead of
+    silently zipping flattened leaves into the wrong slots. Leaf dtypes
+    round-trip exactly as saved (bf16 via the uint16 view, int/uint
+    counters and masks untouched): restore never casts to the example's
+    dtype, so a resumed run replays a bitwise-identical trajectory."""
     step = latest_step(directory) if step is None else step
     if step is None:
         return None
     path = os.path.join(directory, f"step_{step}")
+    if not os.path.exists(os.path.join(path, "manifest.json")):
+        raise ValueError(f"no checkpoint for step {step} under {directory} "
+                         f"(latest complete step: {latest_step(directory)})")
     data = np.load(os.path.join(path, "arrays.npz"))
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+    if manifest.get("step", step) != step:
+        raise ValueError(
+            f"checkpoint {path} manifest claims step "
+            f"{manifest.get('step')} but was requested as step {step}")
     dtypes = manifest.get("dtypes", [])
     flat_ex, treedef = jax.tree_util.tree_flatten(example_tree)
+    n_saved = manifest.get("n_arrays", len(flat_ex))
+    if n_saved != len(flat_ex):
+        raise ValueError(
+            f"checkpoint {path} holds {n_saved} leaves but the requested "
+            f"tree has {len(flat_ex)} — the state structure changed since "
+            f"this checkpoint was written")
+    saved_td = manifest.get("treedef")
+    if saved_td is not None and saved_td != str(treedef):
+        raise ValueError(
+            f"checkpoint {path} tree structure does not match the "
+            f"requested tree.\n  saved:     {saved_td}\n  requested: "
+            f"{treedef} — leaves would be zipped into the wrong slots")
     arrays = []
     for i in range(len(flat_ex)):
         a = data[f"a{i}"]
@@ -119,12 +131,12 @@ def restore_checkpoint(directory: str, example_tree: Any,
         flat_sh, _ = jax.tree_util.tree_flatten(
             shardings, is_leaf=lambda x: x is None
             or isinstance(x, jax.sharding.Sharding))
-        placed = []
-        for a, ex, sh in zip(arrays, flat_ex, flat_sh):
-            a = a.astype(np.asarray(ex).dtype) if hasattr(ex, "dtype") else a
-            placed.append(jax.device_put(a, sh) if sh is not None
-                          else jnp.asarray(a))
-        arrays = placed
+        if len(flat_sh) != len(flat_ex):
+            raise ValueError(
+                f"shardings tree has {len(flat_sh)} leaves, state tree has "
+                f"{len(flat_ex)}")
+        arrays = [jax.device_put(a, sh) if sh is not None else jnp.asarray(a)
+                  for a, sh in zip(arrays, flat_sh)]
     else:
         arrays = [jnp.asarray(a) for a in arrays]
     return jax.tree_util.tree_unflatten(treedef, arrays), step

@@ -122,6 +122,8 @@ class QASSO:
         self.cfg = cfg
         self.lr_schedule = lr_schedule
         self.base: Optimizer = get_optimizer(cfg.base_optimizer)
+        self.mesh = None
+        self._stat_reduce = lambda x: x
         # param -> [(family, member)] covering map (prunable families only)
         self.covering: dict[str, list[tuple[GroupFamily, Member]]] = {}
         for fam in space.prunable_families():
@@ -131,6 +133,21 @@ class QASSO:
         self.k_units = int(round(cfg.target_sparsity * self.total_units))
         self.site_of_param = {p: s.name for s in self.weight_sites
                               for p in s.quantized_params}
+
+    # ----------------------------------------------------------- sharding
+    def replica_consistent(self, mesh) -> "QASSO":
+        """Pin the optimizer's control statistics to `mesh`-replicated
+        layouts (DESIGN.md §5): the seven Eq 15-17 reductions per weight
+        site and the saliency accumulators get an explicit cross-replica
+        all-reduce (`collectives.replicate_stats`) before any decision —
+        partition ranking, bit-width projection, cooldown hard-zeroing —
+        consumes them. Without this GSPMD may combine partial sums at
+        replica-dependent points and the replicas drift onto different
+        subnets. Call before tracing the sharded train step."""
+        from repro.distributed.collectives import replicate_stats
+        self.mesh = mesh
+        self._stat_reduce = replicate_stats(mesh)
+        return self
 
     # ------------------------------------------------------------------ init
     def init(self, params: dict, qparams: dict) -> QASSOState:
@@ -239,11 +256,18 @@ class QASSO:
         qp = qparams[site.name]
         d0, qm, t = qp.d, qp.q_m, qp.t
 
-        # gather redundant-restricted statistics over the site's weights
+        # gather redundant-restricted statistics over the site's weights.
+        # Under a mesh, `_stat_reduce` pins each INPUT to the replicated
+        # layout first: the reductions then run locally over full tensors
+        # in a mesh-size-invariant order, so every replica — and the
+        # 1-device reference — sees bit-identical stats (the downstream
+        # cos-sign branches and the Alg 4 rescale loop are knife edges).
         stats = jnp.zeros((7,), jnp.float32)
         for pname in site.quantized_params:
             stats = stats + self._site_stats_chunked(
-                params[pname], grads[pname], red_elem[pname], d0, qm, t)
+                self._stat_reduce(params[pname]),
+                self._stat_reduce(grads[pname]),
+                self._stat_reduce(red_elem[pname]), d0, qm, t)
         dot_clip, dot_res, n_g2, n_clip2, n_res2, clip_sum, cnt = stats
 
         n_g = jnp.sqrt(n_g2)
@@ -344,7 +368,7 @@ class QASSO:
             # they remain in G_R and count toward the progressive target.
             return global_redundancy_partition(
                 self.space, params, gx, n_red, cfg.saliency,
-                pinned=state.redundant)
+                pinned=state.redundant, reduce=self._stat_reduce)
 
         redundant = jax.lax.cond(is_boundary, recompute,
                                  lambda _: state.redundant, None)

@@ -35,14 +35,22 @@ class SaliencyConfig:
 
 def family_scores(space: PruningSpace, family: GroupFamily,
                   params: dict, grads: dict,
-                  cfg: SaliencyConfig = SaliencyConfig()) -> jax.Array:
+                  cfg: SaliencyConfig = SaliencyConfig(),
+                  reduce=None) -> jax.Array:
     """(units,) saliency for one family. Higher = more important.
 
     Computed as per-member fused reductions (sum of squares / dot per unit,
     accumulated across members) — NEVER as a concatenated (units, W) group
     matrix: concatenating members with different shardings forces GSPMD to
     replicate every weight in f32 (measured ~100 GB/device on the 398B
-    configs)."""
+    configs).
+
+    `reduce`: optional cross-replica reduction point (see
+    `distributed.collectives.replicate_stats`) applied to the member
+    tensors BEFORE the per-unit reductions — under a device mesh this
+    pins each input to the replicated layout so the unit sums run locally
+    in a mesh-size-invariant order and every replica ranks units from
+    bit-identical scores."""
     u = family.units
 
     def unit_reduce(val, m):
@@ -66,6 +74,8 @@ def family_scores(space: PruningSpace, family: GroupFamily,
     for m in family.members:
         xv = params[m.param].astype(jnp.float32)
         gv = grads[m.param].astype(jnp.float32)
+        if reduce is not None:
+            xv, gv = reduce(xv), reduce(gv)
         dot = dot + unit_reduce(xv * gv, m)
         x2 = x2 + unit_reduce(jnp.square(xv), m)
         g2 = g2 + unit_reduce(jnp.square(gv), m)
@@ -91,7 +101,8 @@ def global_redundancy_partition(space: PruningSpace, params: dict, grads: dict,
                                 n_redundant: jax.Array,
                                 cfg: SaliencyConfig = SaliencyConfig(),
                                 frozen: dict | None = None,
-                                pinned: dict | None = None
+                                pinned: dict | None = None,
+                                reduce=None
                                 ) -> dict[str, jax.Array]:
     """Alg 2 line 12: pick the `n_redundant` globally lowest-saliency units.
 
@@ -105,11 +116,13 @@ def global_redundancy_partition(space: PruningSpace, params: dict, grads: dict,
     earlier period (sticky pruning) — their score is sunk to -inf so they
     stay in G_R *and count toward* n_redundant (the progressive schedule
     stays exact).
+    `reduce`: cross-replica reduction hook threaded to `family_scores`
+    (replica-consistent ranking under a device mesh).
     """
     fams = space.prunable_families()
     scores = []
     for fam in fams:
-        s = family_scores(space, fam, params, grads, cfg)
+        s = family_scores(space, fam, params, grads, cfg, reduce=reduce)
         if frozen is not None and fam.name in frozen:
             s = jnp.where(frozen[fam.name] > 0.5, jnp.inf, s)
         if pinned is not None and fam.name in pinned:

@@ -17,8 +17,13 @@ import numpy as np
 
 
 def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
-             n_codebooks: int = 0) -> dict:
-    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+             n_codebooks: int = 0, key=None) -> dict:
+    """`key`, when given, REPLACES the (seed, step) derivation — the train
+    loop threads its checkpointed data key here so a restored run replays
+    the exact stream (the caller guarantees key == fold_in(PRNGKey(seed),
+    step), which keeps the stream identical to the stateless form)."""
+    if key is None:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
     shape = (batch, seq, n_codebooks) if n_codebooks else (batch, seq)
     k1, k2 = jax.random.split(key)
     base = jax.random.randint(k1, shape, 0, vocab)
@@ -60,22 +65,26 @@ def image_batch(seed: int, step: int, batch: int, hw: int = 32,
 
 
 def vlm_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
-              patches: int, d_model: int, dtype=jnp.bfloat16) -> dict:
-    out = lm_batch(seed, step, batch, seq, vocab)
-    key = jax.random.fold_in(jax.random.PRNGKey(seed + 31337), step)
+              patches: int, d_model: int, dtype=jnp.bfloat16,
+              key=None) -> dict:
+    out = lm_batch(seed, step, batch, seq, vocab, key=key)
+    vkey = jax.random.fold_in(jax.random.PRNGKey(seed + 31337), step)
     out["vision_embeds"] = (jax.random.normal(
-        key, (batch, patches, d_model)) * 0.02).astype(dtype)
+        vkey, (batch, patches, d_model)) * 0.02).astype(dtype)
     return out
 
 
-def batch_for(cfg, seed: int, step: int, batch: int, seq: int) -> dict:
-    """Model-family-aware batch builder (the stub 'modality frontend')."""
+def batch_for(cfg, seed: int, step: int, batch: int, seq: int,
+              key=None) -> dict:
+    """Model-family-aware batch builder (the stub 'modality frontend').
+    `key` optionally carries the checkpointed per-step data key (see
+    `lm_batch`)."""
     if cfg.family == "audio":
         return lm_batch(seed, step, batch, seq, cfg.vocab,
-                        n_codebooks=cfg.num_codebooks)
+                        n_codebooks=cfg.num_codebooks, key=key)
     if cfg.family == "vlm":
         return vlm_batch(seed, step, batch, seq - cfg.vision_patches,
                          cfg.vocab, cfg.vision_patches, cfg.d_model,
                          dtype=jnp.bfloat16 if cfg.dtype == "bfloat16"
-                         else jnp.float32)
-    return lm_batch(seed, step, batch, seq, cfg.vocab)
+                         else jnp.float32, key=key)
+    return lm_batch(seed, step, batch, seq, cfg.vocab, key=key)

@@ -17,7 +17,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 try:  # JAX >= 0.6 exports shard_map at the top level
     from jax import shard_map as _shard_map
@@ -35,6 +35,28 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
                           out_specs=out_specs, check_vma=check_vma)
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_rep=check_vma)
+
+
+def replicate_stats(mesh: Mesh | None):
+    """Explicit cross-replica reduction point for optimizer statistics.
+
+    Under GSPMD a reduction over a sharded tensor yields partial sums whose
+    combine point (and summation order) the partitioner is free to place
+    anywhere downstream. QASSO's control decisions — the saliency partition,
+    the Eq 16/17 projection stats, cooldown hard-zeroing — must be computed
+    from IDENTICAL values on every replica, or replicas silently train
+    different subnets. Constraining the statistic to the fully-replicated
+    layout on `mesh` pins the all-reduce *here*, before any decision
+    consumes it. Identity when mesh is None (single-process training).
+    """
+    if mesh is None:
+        return lambda x: x
+    rep = NamedSharding(mesh, P())
+
+    def reduce_fn(x):
+        return jax.lax.with_sharding_constraint(x, rep)
+
+    return reduce_fn
 
 
 BLOCK = 256

@@ -34,6 +34,27 @@ class FaultConfig:
     max_restarts: int = 10
 
 
+class DeviceLoss(RuntimeError):
+    """A device dropped out of the mesh mid-step (ICI/host failure)."""
+
+
+# XLA surfaces device/fabric failures as generic RuntimeErrors; these
+# substrings are the stable markers across backends (TPU DATA_LOSS,
+# GPU NCCL aborts, PJRT device removal).
+_DEVICE_LOSS_MARKERS = ("data_loss", "device lost", "device failure",
+                        "nccl", "interconnect", "socket closed")
+
+
+def is_device_loss(exc: BaseException) -> bool:
+    """Classify an exception as a device loss (restorable: the surviving
+    hosts restart from the latest checkpoint) vs a program bug (which
+    should also restore, but is worth distinguishing in telemetry)."""
+    if isinstance(exc, DeviceLoss):
+        return True
+    msg = str(exc).lower()
+    return any(m in msg for m in _DEVICE_LOSS_MARKERS)
+
+
 class HeartbeatRegistry:
     def __init__(self, hosts: list[str], timeout: float):
         self.timeout = timeout
@@ -77,6 +98,7 @@ class RunResult:
     final_step: int
     restarts: int
     stragglers_flagged: list[str]
+    device_losses: int = 0
 
 
 class FaultTolerantLoop:
@@ -99,8 +121,10 @@ class FaultTolerantLoop:
         self.heartbeats = HeartbeatRegistry([host], cfg.heartbeat_timeout)
 
     def run(self, state, total_steps: int) -> tuple[object, RunResult]:
+        initial_state = state
         step = 0
         restarts = 0
+        device_losses = 0
         while step < total_steps:
             try:
                 t0 = time.monotonic()
@@ -110,13 +134,24 @@ class FaultTolerantLoop:
                 step += 1
                 if step % self.cfg.checkpoint_every == 0:
                     self.save_fn(state, step)
-            except Exception:
+            except Exception as e:
+                # a device loss is the expected fleet event: restore from
+                # the latest complete checkpoint instead of crashing
+                if is_device_loss(e):
+                    device_losses += 1
                 restarts += 1
                 if restarts > self.cfg.max_restarts:
                     raise
                 restored = self.restore_fn()
-                if restored is None:      # no checkpoint yet: restart fresh
+                if restored is None:
+                    # no checkpoint yet: restart TRULY fresh — from the
+                    # initial state, not the half-trained one (a stale
+                    # state at step 0 desyncs everything keyed on the
+                    # step counter: the QASSO stage schedule, the data
+                    # stream, the checkpointed RNG key)
+                    state = initial_state
                     step = 0
                     continue
                 state, step = restored
-        return state, RunResult(step, restarts, self.monitor.flagged)
+        return state, RunResult(step, restarts, self.monitor.flagged,
+                                device_losses)

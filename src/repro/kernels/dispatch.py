@@ -49,6 +49,25 @@ def platform_default() -> str:
     return "xla-ref"
 
 
+def backend_for_mesh(mesh) -> str:
+    """Mesh-aware backend pick for sharded programs.
+
+    Any mesh spanning more than one device routes to the partitionable XLA
+    path regardless of platform — a pallas_call is an opaque custom call
+    with no GSPMD partitioning rule, so letting it into a sharded program
+    means a full-weight all-gather per call. A 1-device mesh (the parity
+    reference, or a single-TPU host) keeps the platform default so the MXU
+    kernels stay on the hot path."""
+    if mesh is None:
+        return platform_default()
+    size = getattr(mesh, "size", None)
+    if size is None:  # AbstractMesh on older JAX: fall back to axis product
+        size = 1
+        for s in dict(mesh.shape).values():
+            size *= int(s)
+    return "xla-ref" if size > 1 else platform_default()
+
+
 def set_backend(name: str | None) -> None:
     """Process-wide backend override (None restores platform selection)."""
     if name is not None and name not in BACKENDS:

@@ -11,6 +11,7 @@ older default — pass it when supported, omit it when not.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_mesh(shape, axes):
@@ -41,3 +42,17 @@ def make_host_mesh():
     """Whatever devices exist (CPU smoke/tests): a 1D data mesh."""
     n = len(jax.devices())
     return make_mesh((n, 1), ("data", "model"))
+
+
+def make_subset_mesh(n: int, axes=("data", "model")):
+    """A (n, 1) mesh over the FIRST n local devices.
+
+    `jax.make_mesh` insists the axis product covers every device; the
+    sharded-parity tests and scaling benches need a 1-device reference mesh
+    and an n-device mesh side by side in one multi-device process, so this
+    builds the Mesh directly from a device subset."""
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(f"requested {n} devices, host has {len(devs)}")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape((n, 1)), axes)

@@ -14,8 +14,13 @@ import os
 import sys
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
-# Never inherit the dry-run's 512 fake host devices into real tests.
-if "force_host_platform" in os.environ.get("XLA_FLAGS", ""):
+# Never inherit the dry-run's 512 fake host devices into real tests —
+# EXCEPT when the multi-device tier opts in explicitly: the sharded-parity
+# and resume tests (tests/test_sharded_training.py) run under
+#   REPRO_MULTI_DEVICE=1 XLA_FLAGS=--xla_force_host_platform_device_count=4
+# and skip themselves when fewer than 4 devices are visible.
+if ("force_host_platform" in os.environ.get("XLA_FLAGS", "")
+        and not os.environ.get("REPRO_MULTI_DEVICE")):
     os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

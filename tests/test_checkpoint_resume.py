@@ -1,0 +1,179 @@
+"""Kill-and-resume determinism + checkpoint validation tier.
+
+A killed GETA run restored from its checkpoint must replay onto a
+BITWISE-identical trajectory: the checkpoint carries the full state tree
+(params, qparams, the whole QASSOState — base-optimizer moments, step
+counter, partition masks — and the data-RNG key), restore preserves every
+leaf dtype exactly (bf16 via the uint16 view, int counters untouched),
+and the data pipeline is a pure function of (seed, step).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.distributed.fault import (DeviceLoss, FaultConfig,
+                                     FaultTolerantLoop, is_device_loss)
+from repro.launch.train import train_loop
+
+
+def assert_tree_bitwise(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"tree structure differs: {ta} vs {tb}"
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype, f"dtype drift: {x.dtype} vs {y.dtype}"
+        np.testing.assert_array_equal(x, y)
+
+
+# ------------------------------------------------- kill-and-resume replay
+def test_kill_and_resume_bitwise(tmp_path):
+    """Train 10 steps; checkpoint at 5; die at 7; restore and replay.
+    The final tree equals the uninterrupted run bit for bit."""
+    kw = dict(smoke=True, steps=10, batch=2, seq=8, verbose=False)
+    clean, _, _, _ = train_loop("internlm2-1.8b", **kw)
+    faulty, _, _, losses = train_loop(
+        "internlm2-1.8b", ckpt_dir=str(tmp_path), inject_failure_at=7,
+        checkpoint_every=5, **kw)
+    # steps 5 and 6 ran twice (once before the kill, once on replay)
+    assert len(losses) == 12
+    assert_tree_bitwise(clean, faulty)
+    # ... and the state checkpointed at step 5 is still on disk, loadable
+    assert latest_step(str(tmp_path)) in (5, 10)
+
+
+def test_failure_before_first_checkpoint_restarts_fresh(tmp_path):
+    """A failure with NO checkpoint on disk restarts from the INITIAL
+    state (not the half-trained one): the loop counter, the QASSO stage
+    schedule, the data stream and the checkpointed RNG key all re-sync at
+    step 0, so the final tree still equals the uninterrupted run."""
+    kw = dict(smoke=True, steps=8, batch=2, seq=8, verbose=False)
+    clean, _, _, _ = train_loop("internlm2-1.8b", **kw)
+    faulty, _, _, losses = train_loop(
+        "internlm2-1.8b", ckpt_dir=str(tmp_path), inject_failure_at=3,
+        checkpoint_every=5, **kw)
+    # steps 0-2 ran, failure at 3 (pre-checkpoint), then a full 0-7 replay
+    assert len(losses) == 11
+    assert_tree_bitwise(clean, faulty)
+
+
+def test_resume_covers_int_and_rng_leaves(tmp_path):
+    """The saved tree includes the QASSO step counter (int32), the
+    base-optimizer count and the fold_in data key (uint32) — all restored
+    with their exact dtypes."""
+    state, _, _, _ = train_loop(
+        "internlm2-1.8b", smoke=True, steps=4, batch=2, seq=8,
+        verbose=False, ckpt_dir=str(tmp_path), checkpoint_every=2)
+    restored, step = restore_checkpoint(str(tmp_path), state)
+    assert step == 4
+    assert np.asarray(restored["qstate"].step).dtype == np.int32
+    assert int(restored["qstate"].step) == 4
+    assert np.asarray(restored["rng"]).dtype == np.uint32
+    assert_tree_bitwise(state, restored)
+
+
+# ------------------------------------------------- restore validation
+def test_restore_preserves_dtypes_roundtrip(tmp_path):
+    tree = {
+        "f32": jnp.arange(6.0).reshape(2, 3),
+        "bf16": (jnp.ones((5,), jnp.bfloat16) * 1.5),
+        "i32": jnp.arange(4, dtype=jnp.int32),
+        "u32": jnp.asarray([1, 2**31], jnp.uint32),
+        "i8": jnp.asarray([-3, 7], jnp.int8),
+    }
+    save_checkpoint(str(tmp_path), 1, tree)
+    restored, _ = restore_checkpoint(str(tmp_path), tree)
+    assert_tree_bitwise(tree, restored)
+
+
+def test_restore_preserves_dtypes_with_shardings(tmp_path):
+    """The sharded-restore path must not cast leaves to the example's
+    dtype (the old behaviour silently converted bf16/int leaves)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    tree = {"w": jnp.ones((4, 4), jnp.bfloat16),
+            "n": jnp.int32(7)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    sh = {"w": NamedSharding(mesh, P("data", None)), "n": None}
+    # example deliberately carries the WRONG dtypes: saved dtypes win
+    example = {"w": jnp.ones((4, 4), jnp.float32), "n": jnp.float32(0)}
+    restored, _ = restore_checkpoint(str(tmp_path), example, shardings=sh)
+    assert restored["w"].dtype == jnp.bfloat16
+    assert np.asarray(restored["n"]).dtype == np.int32
+    assert restored["w"].sharding == sh["w"]
+
+
+def test_restore_rejects_structure_mismatch(tmp_path):
+    save_checkpoint(str(tmp_path), 3, {"a": jnp.zeros(2), "b": jnp.ones(3)})
+    with pytest.raises(ValueError, match="structure"):
+        restore_checkpoint(str(tmp_path), {"a": jnp.zeros(2),
+                                           "renamed": jnp.ones(3)})
+    with pytest.raises(ValueError, match="leaves"):
+        restore_checkpoint(str(tmp_path), {"a": jnp.zeros(2)})
+
+
+def test_restore_rejects_missing_step(tmp_path):
+    save_checkpoint(str(tmp_path), 3, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="no checkpoint for step"):
+        restore_checkpoint(str(tmp_path), {"a": jnp.zeros(2)}, step=99)
+
+
+# ------------------------------------------------- device-loss fault path
+def test_device_loss_triggers_restore_not_crash():
+    """A simulated device loss mid-step restores from the checkpoint and
+    replays to the same final state as an uninterrupted run."""
+
+    def make_run(fail_at):
+        def step_fn(state, i):
+            if fail_at is not None and i == fail_at[0]:
+                fail_at[0] = None
+                raise DeviceLoss("DATA_LOSS: device 2 dropped out of mesh")
+            state = state + float(i) * 0.5
+            return state
+
+        store = {}
+        loop = FaultTolerantLoop(
+            FaultConfig(checkpoint_every=3), step_fn,
+            lambda s, i: store.__setitem__("ckpt", (s, i)),
+            lambda: store.get("ckpt"))
+        return loop.run(0.0, 10)
+
+    clean, r0 = make_run(None)
+    recovered, r1 = make_run([7])
+    assert r0.device_losses == 0
+    assert r1.device_losses == 1
+    assert r1.restarts == 1
+    assert clean == pytest.approx(recovered)
+
+
+def test_is_device_loss_classification():
+    assert is_device_loss(DeviceLoss("gone"))
+    assert is_device_loss(RuntimeError("DATA_LOSS: while running replica"))
+    assert is_device_loss(RuntimeError("NCCL communicator aborted"))
+    assert not is_device_loss(ValueError("shape mismatch"))
+    assert not is_device_loss(RuntimeError("nan loss"))
+
+
+def test_fault_loop_counts_generic_failures_separately():
+    """A plain bug still restarts, but is not recorded as a device loss."""
+
+    fail = [2]
+
+    def step_fn(state, i):
+        if fail and i == fail[0]:
+            fail.pop()
+            raise RuntimeError("injected software bug")
+        return state + 1
+
+    loop = FaultTolerantLoop(
+        FaultConfig(checkpoint_every=100), step_fn,
+        lambda s, i: None, lambda: None)
+    state, result = loop.run(0, 5)
+    assert result.restarts == 1
+    assert result.device_losses == 0

@@ -1,0 +1,191 @@
+"""Sharded GETA training parity tier.
+
+The contract under test (DESIGN.md §5): a GETA/QASSO train step on a
+k-device mesh is BITWISE-identical to the 1-device reference running the
+same step with `grad_slices=k` — deterministic ordered gradient reduction
+plus replica-consistent QASSO statistics make the whole trajectory (loss,
+post-projection qparams, pruned-group masks, optimizer moments) exact, not
+merely close. The asserts below use the issue tolerance (<=1e-6, identical
+masks); the design delivers equality.
+
+The 4-device cases need fake host devices:
+
+    REPRO_MULTI_DEVICE=1 \
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m pytest tests/test_sharded_training.py
+
+and skip themselves on 1-device hosts (the regular fast tier still runs
+the 1-device consistency tests).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CompressionConfig, get_arch
+from repro.data.synthetic import batch_for, image_batch
+from repro.distributed.sharding import make_plan
+from repro.launch.mesh import make_subset_mesh
+from repro.launch.specs import param_specs
+from repro.launch.train import (build_geta, make_geta_train_step,
+                                make_sharded_geta_train_step)
+from repro.models.cnn import CNN, CNNSpec
+from repro.models.transformer import LM
+
+needs4 = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs REPRO_MULTI_DEVICE=1 "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+# 10 steps covering all four QASSO stages: warm-up [0,2), projection
+# [2,4), joint [4,8) with a partition recompute at 4 and 6 and the
+# hard-zero finalize at 7, cool-down [8,10).
+COMP = CompressionConfig(
+    target_sparsity=0.25, bit_lower=4, bit_upper=16,
+    warmup_steps=2, projection_periods=1, projection_steps=2,
+    pruning_periods=2, pruning_steps=2, cooldown_steps=2)
+STEPS = 10
+TINY_CNN = CNNSpec("tiny-vgg", "vgg", [16, 16], fc_dim=32, in_hw=8)
+
+
+def _host(tree):
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+def _run_transformer(n_devices: int, fsdp: bool, grad_slices: int = 4):
+    cfg = get_arch("internlm2-1.8b", smoke=True)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    qparams = lm.init_qparams(params, bits_init=16.0)
+    _, qasso = build_geta(lm, COMP, lr=3e-3, base_optimizer="momentum")
+    qstate = qasso.init(params, qparams)
+    mesh = make_subset_mesh(n_devices)
+    plan = make_plan(mesh, fsdp=fsdp)
+    _, p_sh, _ = param_specs(lm, mesh, plan)
+    jstep, (psh, qsh, ssh, bsh) = make_sharded_geta_train_step(
+        lm, qasso, mesh, params, qparams, param_shardings=p_sh,
+        grad_slices=grad_slices)
+    params = jax.device_put(params, psh)
+    qparams = jax.device_put(qparams, qsh)
+    qstate = jax.device_put(qstate, ssh)
+    losses = []
+    for i in range(STEPS):
+        b = jax.device_put(batch_for(cfg, 0, i, 4, 16), bsh)
+        params, qparams, qstate, m = jstep(params, qparams, qstate, b)
+        losses.append(float(m["loss"]))
+    return losses, _host(params), _host(qparams), _host(qstate)
+
+
+def _run_cnn(n_devices: int, grad_slices: int = 4):
+    model = CNN(TINY_CNN)
+    params = model.init(jax.random.PRNGKey(0))
+    qparams = model.init_qparams(params, bits_init=16.0)
+    _, qasso = build_geta(model, COMP, lr=3e-3, base_optimizer="momentum")
+    qstate = qasso.init(params, qparams)
+    mesh = make_subset_mesh(n_devices)
+    # the CNN has no logical sharding axes: pure DP, params replicated
+    jstep, (psh, qsh, ssh, bsh) = make_sharded_geta_train_step(
+        model, qasso, mesh, params, qparams, grad_slices=grad_slices)
+    params = jax.device_put(params, psh)
+    qparams = jax.device_put(qparams, qsh)
+    qstate = jax.device_put(qstate, ssh)
+    losses = []
+    for i in range(STEPS):
+        b = jax.device_put(image_batch(0, i, 8, hw=8), bsh)
+        params, qparams, qstate, m = jstep(params, qparams, qstate, b)
+        losses.append(float(m["loss"]))
+    return losses, _host(params), _host(qparams), _host(qstate)
+
+
+def _assert_parity(run_a, run_b):
+    losses_a, params_a, qparams_a, qstate_a = run_a
+    losses_b, params_b, qparams_b, qstate_b = run_b
+    np.testing.assert_allclose(losses_a, losses_b, rtol=0, atol=1e-6)
+    for xa, xb in zip(jax.tree_util.tree_leaves(qparams_a),
+                      jax.tree_util.tree_leaves(qparams_b)):
+        np.testing.assert_allclose(xa, xb, rtol=0, atol=1e-6)
+    for xa, xb in zip(jax.tree_util.tree_leaves(params_a),
+                      jax.tree_util.tree_leaves(params_b)):
+        np.testing.assert_allclose(xa, xb, rtol=0, atol=1e-6)
+    # masks and the step counter must be IDENTICAL: a single flipped unit
+    # means the replicas trained different subnets
+    for key in ("redundant", "keep_mask"):
+        ma, mb = getattr(qstate_a, key), getattr(qstate_b, key)
+        for fam in ma:
+            np.testing.assert_array_equal(ma[fam], mb[fam], err_msg=key)
+    np.testing.assert_array_equal(qstate_a.step, qstate_b.step)
+
+
+@needs4
+@pytest.mark.parametrize("fsdp", [False, True], ids=["dp", "fsdp"])
+def test_transformer_parity_1dev_vs_4dev(fsdp):
+    """4-device GETA step == 1-device reference over 10 steps, through
+    every QASSO stage (loss, qparams, masks — issue criterion <=1e-6)."""
+    _assert_parity(_run_transformer(1, fsdp), _run_transformer(4, fsdp))
+
+
+@needs4
+def test_cnn_parity_1dev_vs_4dev():
+    _assert_parity(_run_cnn(1), _run_cnn(4))
+
+
+@needs4
+def test_fsdp_plan_actually_shards_params():
+    """Guard against the FSDP parity case silently degenerating to pure
+    DP: the plan must shard the embed axis across the 4 data devices."""
+    cfg = get_arch("internlm2-1.8b", smoke=True)
+    lm = LM(cfg)
+    mesh = make_subset_mesh(4)
+    plan = make_plan(mesh, fsdp=True)
+    _, p_sh, _ = param_specs(lm, mesh, plan)
+    sharded = [name for name, sh in p_sh.items()
+               if any(p is not None for p in sh.spec)]
+    assert sharded, "fsdp plan produced no sharded params"
+
+
+def test_sharded_step_matches_plain_step_single_device():
+    """On a 1-device mesh with grad_slices=1 the sharded builder reduces
+    to the plain jitted GETA step (runs in the regular fast tier)."""
+    cfg = get_arch("internlm2-1.8b", smoke=True)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    qparams = lm.init_qparams(params, bits_init=16.0)
+    _, qasso = build_geta(lm, COMP, lr=3e-3, base_optimizer="momentum")
+    qstate = qasso.init(params, qparams)
+    b = batch_for(cfg, 0, 0, 4, 16)
+
+    plain = jax.jit(make_geta_train_step(lm, qasso))
+    p_ref, q_ref, s_ref, m_ref = plain(params, qparams, qstate, b)
+
+    mesh = make_subset_mesh(1)
+    _, qasso2 = build_geta(lm, COMP, lr=3e-3, base_optimizer="momentum")
+    jstep, (psh, qsh, ssh, bsh) = make_sharded_geta_train_step(
+        lm, qasso2, mesh, params, qparams, grad_slices=1)
+    p_s, q_s, s_s, m_s = jstep(jax.device_put(params, psh),
+                               jax.device_put(qparams, qsh),
+                               jax.device_put(qstate, ssh),
+                               jax.device_put(b, bsh))
+    np.testing.assert_allclose(float(m_ref["loss"]), float(m_s["loss"]),
+                               rtol=0, atol=1e-6)
+    for a, c in zip(jax.tree_util.tree_leaves(_host(p_ref)),
+                    jax.tree_util.tree_leaves(_host(p_s))):
+        np.testing.assert_allclose(a, c, rtol=0, atol=1e-6)
+    for a, c in zip(jax.tree_util.tree_leaves(_host(q_ref)),
+                    jax.tree_util.tree_leaves(_host(q_s))):
+        np.testing.assert_allclose(a, c, rtol=0, atol=1e-6)
+
+
+def test_ordered_grads_reject_mismatched_slices():
+    """grad_slices must equal the mesh's DP degree on a multi-device mesh
+    (one slice per device is what makes the reduction tree deterministic).
+    On a 1-device mesh any slice count is a valid sequential split."""
+    from repro.launch.train import make_ordered_loss_grads
+    cfg = get_arch("internlm2-1.8b", smoke=True)
+    lm = LM(cfg)
+    if jax.device_count() >= 4:
+        with pytest.raises(ValueError, match="one slice per device"):
+            make_ordered_loss_grads(lm, make_subset_mesh(4), None,
+                                    grad_slices=2)
+    lg = make_ordered_loss_grads(lm, make_subset_mesh(1), None,
+                                 grad_slices=2)
+    assert callable(lg)
