@@ -4,9 +4,12 @@ Submits a handful of requests with different prompt lengths and token
 budgets, drains the engine, and prints each request's generated tokens
 plus the throughput counters (decode tok/s, one-shot prefill tok/s, slot
 occupancy). `--compressed` serves from Subnet int8 codes through the
-quant-dequant GEMM epilogue — the deployment path.
+quant-dequant GEMM epilogue; `--pruned` physically slices the model to
+magnitude masks first (surviving heads / MLP hidden / experts only — the
+GEMMs and the KV arena shrink with realized sparsity). Stacked, they are
+the full deployment path: int codes at pruned shapes.
 
-    PYTHONPATH=src python examples/serve_engine.py --compressed \
+    PYTHONPATH=src python examples/serve_engine.py --compressed --pruned \
         --prompt-lens 16,4,9,12 --gens 24,8,16,12 --slots 2
 """
 import argparse
@@ -28,6 +31,11 @@ def main():
     ap.add_argument("--compressed", action="store_true", default=False,
                     help="decode from Subnet int codes (quant-dequant GEMM "
                          "epilogue) instead of dense weights")
+    ap.add_argument("--pruned", action="store_true", default=False,
+                    help="physically slice the model to magnitude masks at "
+                         "--sparsity and serve the pruned shapes (smaller "
+                         "GEMMs, shrunk KV arena); stacks with --compressed")
+    ap.add_argument("--sparsity", type=float, default=0.5)
     args = ap.parse_args()
 
     lens = [int(x) for x in args.prompt_lens.split(",")]
@@ -37,7 +45,8 @@ def main():
     assert len(gens) == len(lens), "--gens must match --prompt-lens"
 
     eng, lm = build_engine(args.arch, smoke=True, quantized=args.quant,
-                           compressed=args.compressed, max_slots=args.slots,
+                           compressed=args.compressed, pruned=args.pruned,
+                           sparsity=args.sparsity, max_slots=args.slots,
                            max_seq=max(p + g for p, g in zip(lens, gens)),
                            verbose=True)
     rids = [eng.submit(p, g) for p, g in

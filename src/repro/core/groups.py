@@ -150,7 +150,15 @@ class PruningSpace:
                 else:
                     elem = (np.arange(m.unit_size)[:, None] * fam.units
                             + keep_units[None, :]).reshape(-1)
-                elem = elem[elem < axis_len]
+                if elem.size and int(elem.max()) >= axis_len:
+                    # Silently truncating here would slice the wrong
+                    # elements and ship a corrupted subnet.
+                    raise ValueError(
+                        f"family {fam.name}: member {m.param} (axis "
+                        f"{m.axis}, layout {m.layout}) maps kept units to "
+                        f"element index {int(elem.max())}, but the axis has "
+                        f"length {axis_len} — mis-specified units"
+                        f"({fam.units}) / unit_size({m.unit_size}) / layout")
                 out[m.param] = jnp.take(arr, jnp.asarray(elem), axis=m.axis)
         return out, kept
 

@@ -27,6 +27,14 @@ from repro.core.qadg import QADG
 from repro.core.quant import QuantParams, bit_width, quantize_int
 
 
+def tree_bytes(tree) -> int:
+    """Bytes a pytree of arrays occupies — the one counter behind every
+    realized-size figure (served params, KV arena, benchmark rows), so
+    the reports can't drift apart."""
+    return sum(int(leaf.size) * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
 def _storage_dtype(bits: float):
     nbits = int(np.ceil(bits))
     if nbits <= 8:
@@ -44,6 +52,25 @@ class Subnet:
     bits: dict[str, float]                  # site name -> bit width
     kept_units: dict[str, np.ndarray]       # family -> surviving unit ids
     meta: dict[str, Any]
+
+
+@dataclasses.dataclass
+class SlimPlan:
+    """Per-sublayer physical shapes of a pruned LM subnet.
+
+    `layer_shapes` holds one `models.layers.LayerShapes` per
+    position-in-period (aligned with `LM.plan`); `LM.apply_slim_plan`
+    installs them so forward/prefill/decode_step reshape — and init_cache
+    allocates — at the sliced widths. Per-stack pruning granularity
+    (DESIGN.md §2.2) makes every layer of a stack share its position's
+    shapes, so the layer-stack `lax.scan` stays shape-homogeneous and the
+    compiled-shape set is bounded by the period (the engine's `warmup()`
+    precompile contract).
+    """
+    layer_shapes: list[Any]                 # one LayerShapes per plan entry
+    kept_units: dict[str, np.ndarray]       # family -> surviving unit ids
+    sparsity: float                         # realized over prunable units
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 def construct_subnet(qadg: QADG, params: dict, qparams: dict,
@@ -80,6 +107,147 @@ def construct_subnet(qadg: QADG, params: dict, qparams: dict,
         })
 
 
+# ------------------------------------------------------------- slim plan
+def _check_family(kept_units: dict, fam: str, got: int, unit: int = 1,
+                  what: str = "") -> None:
+    kept = kept_units.get(fam)
+    if kept is not None and len(kept) * unit != got:
+        raise ValueError(
+            f"slim plan: family {fam} keeps {len(kept)} units "
+            f"(x{unit}) but the sliced {what or 'param'} has width {got}")
+
+
+def derive_slim_plan(lm, params: dict, kept_units: dict[str, np.ndarray],
+                     sparsity: float = 0.0) -> SlimPlan:
+    """Derive the per-sublayer execution shapes of a sliced LM.
+
+    `params` is `PruningSpace.materialize` output; the sliced tensors are
+    the ground truth for each width (surviving kv-head groups x gqa_group
+    heads, MLP hidden units, experts, mamba inner channels, rwkv heads),
+    cross-checked against `kept_units` wherever a structured family name
+    identifies the axis. The residual width is pinned by the non-prunable
+    embed/head space and stays `d_model`."""
+    from repro.models.layers import LayerShapes
+    cfg = lm.cfg
+
+    def dim(name: str) -> int:
+        return int(params[name].shape[-1])
+
+    shapes = []
+    for sub in lm.plan:
+        pre = f"blocks.{sub.j}"
+        kw: dict[str, int] = {}
+        if sub.mixer == "attn":
+            q_dim, kv_dim = dim(f"{pre}.attn.wq"), dim(f"{pre}.attn.wk")
+            if q_dim % cfg.d_head or kv_dim % cfg.d_head:
+                raise ValueError(
+                    f"{pre}.attn: sliced q/kv widths {q_dim}/{kv_dim} are "
+                    f"not multiples of d_head={cfg.d_head} — the kv-group "
+                    f"family must remove whole heads")
+            kw.update(n_heads=q_dim // cfg.d_head,
+                      n_kv_heads=kv_dim // cfg.d_head)
+            _check_family(kept_units, f"{pre}.attn.kv_groups",
+                          kw["n_heads"], cfg.gqa_group, "wq head count")
+        elif sub.mixer == "mamba":
+            kw.update(mamba_inner=dim(f"{pre}.mamba.in_proj_x"))
+            _check_family(kept_units, f"{pre}.mamba.channels",
+                          kw["mamba_inner"], 1, "in_proj_x")
+        else:
+            hw = dim(f"{pre}.rwkv.wr")
+            if hw % cfg.rwkv.head_size:
+                raise ValueError(
+                    f"{pre}.rwkv: sliced width {hw} is not a multiple of "
+                    f"head_size={cfg.rwkv.head_size}")
+            kw.update(rwkv_heads=hw // cfg.rwkv.head_size)
+            _check_family(kept_units, f"{pre}.rwkv.heads",
+                          kw["rwkv_heads"], 1, "wr head count")
+        if sub.ffn == "mlp":
+            kw.update(d_ff=dim(f"{pre}.mlp.w_gate"))
+            for fam in kept_units:
+                # the MLP hidden space is a generic dependency-analysis
+                # family: "space.<sid>.blocks.<j>.mlp.gate"
+                if fam.endswith(f".{pre}.mlp.gate"):
+                    _check_family(kept_units, fam, kw["d_ff"], 1, "w_gate")
+        elif sub.ffn == "moe":
+            kw.update(n_experts=dim(f"{pre}.moe.router"))
+            _check_family(kept_units, f"{pre}.moe.experts",
+                          kw["n_experts"], 1, "router")
+        elif sub.ffn == "chanmix":
+            kw.update(cm_hidden=dim(f"{pre}.rwkv.cm_k"))
+            _check_family(kept_units, f"{pre}.rwkv.cm_hidden",
+                          kw["cm_hidden"], 1, "cm_k")
+        shapes.append(dataclasses.replace(LayerShapes.from_config(cfg), **kw))
+    return SlimPlan(layer_shapes=shapes, kept_units=dict(kept_units),
+                    sparsity=float(sparsity))
+
+
+def default_min_keep(cfg) -> dict[str, int]:
+    """Per-family-kind keep floors for serving-side masks: at least one
+    unit everywhere, and never fewer experts than the router's top_k."""
+    floors = {"head_group": 1, "channel": 1, "state": 1}
+    if cfg.moe is not None:
+        floors["expert"] = cfg.moe.top_k
+    return floors
+
+
+def magnitude_keep_masks(space, params: dict, sparsity: float, *,
+                         min_keep: Optional[dict[str, int]] = None
+                         ) -> dict[str, jax.Array]:
+    """Deterministic keep masks at a target sparsity: per prunable family,
+    keep the top-(1-s) units by group L2 magnitude — the serving-side
+    stand-in for a trained QASSO mask (`prepare_serving` synthesizes one
+    when no mask dict is supplied). Ties break by unit index, so the same
+    params always yield the same masks (the pruned-vs-masked parity
+    checks lean on that)."""
+    min_keep = dict(min_keep or {})
+    masks = {}
+    for fam in space.prunable_families():
+        score = np.linalg.norm(
+            np.asarray(space.group_matrix(params, fam), np.float32), axis=1)
+        floor = max(int(min_keep.get(fam.kind, 1)), 1)
+        n_keep = int(np.clip(fam.units - round(sparsity * fam.units),
+                             floor, fam.units))
+        keep = np.sort(np.argsort(-score, kind="stable")[:n_keep])
+        m = np.zeros((fam.units,), np.float32)
+        m[keep] = 1.0
+        masks[fam.name] = jnp.asarray(m)
+    return masks
+
+
+def resolve_keep_masks(lm, params: dict, sparsity: float):
+    """One mask-resolution recipe for the pruned path AND its masked
+    reference oracle: QADG + magnitude masks with the default floors.
+    Both sides calling this is what makes the token-identity parity
+    checks compare against the *same* masks. Returns (qadg, masks)."""
+    from repro.core.qadg import build_qadg
+    qadg = build_qadg(lm.build_graph().graph)
+    masks = magnitude_keep_masks(qadg.space, params, sparsity,
+                                 min_keep=default_min_keep(lm.cfg))
+    return qadg, masks
+
+
+def prune_lm(lm, params: dict, *, keep_masks: Optional[dict] = None,
+             sparsity: float = 0.5) -> tuple[dict, SlimPlan]:
+    """Physically slice an LM to its pruned shapes, end to end.
+
+    Builds the QADG, resolves keep masks (a trained QASSO mask dict, or
+    magnitude masks at `sparsity` when none is given), materializes the
+    sliced params, and installs the derived SlimPlan on `lm` (mutating it:
+    forward/prefill/decode_step and init_cache now run at the sliced
+    widths). Returns (sliced params, plan)."""
+    if keep_masks is None:
+        qadg, keep_masks = resolve_keep_masks(lm, params, sparsity)
+    else:
+        from repro.core.qadg import build_qadg
+        qadg = build_qadg(lm.build_graph().graph)
+    sliced, kept = qadg.space.materialize(params, keep_masks)
+    n_kept = sum(len(v) for v in kept.values())
+    realized = 1.0 - n_kept / max(qadg.space.total_units(), 1)
+    plan = derive_slim_plan(lm, sliced, kept, sparsity=realized)
+    lm.apply_slim_plan(plan)
+    return sliced, plan
+
+
 # --------------------------------------------------------------- serving
 def _routed(name: str) -> bool:
     """True if the models execute this weight through `dense_proj` (and so
@@ -107,6 +275,7 @@ def compress_lm(lm, params: dict, qparams: dict,
     bits: dict[str, float] = {}
     dense = dict(params)
     dense_bytes = quant_bytes = 0
+    skipped: list[str] = []
     for name in lm.quant_weight_names():
         site = name + ".wq"
         if name not in params or site not in qparams:
@@ -118,7 +287,10 @@ def compress_lm(lm, params: dict, qparams: dict,
         if not _routed(name):
             # only compress weights the decode can actually execute from
             # codes — popping a non-routed weight would drop it entirely
-            # (servable_params re-emits codes for routed names only)
+            # (servable_params re-emits codes for routed names only).
+            # Record the skip so compression_report can surface it instead
+            # of silently over-promising coverage.
+            skipped.append(name)
             continue
         qp: QuantParams = qparams[site]
         b = float(bit_width(qp.d, qp.q_m, qp.t))
@@ -139,6 +311,7 @@ def compress_lm(lm, params: dict, qparams: dict,
             "n_sites": len(bits),
             "weight_bytes_dense": dense_bytes,
             "weight_bytes_compressed": quant_bytes,
+            "skipped_sites": skipped,
         })
 
 
@@ -163,7 +336,9 @@ def residual_qparams(subnet: Subnet, qparams: dict) -> Optional[dict]:
 
 def prepare_serving(lm, params: dict, qparams: Optional[dict] = None, *,
                     quantized: bool = True, compressed: bool = False,
-                    bits_init: float = 8.0
+                    bits_init: float = 8.0,
+                    keep_masks: Optional[dict] = None,
+                    prune_sparsity: Optional[float] = None
                     ) -> tuple[dict, Optional[dict], dict[str, Any]]:
     """Resolve one (params, qparams) pair every serving entry point decodes
     with — built once, reused across the prefill jit, the per-slot decode
@@ -171,31 +346,64 @@ def prepare_serving(lm, params: dict, qparams: Optional[dict] = None, *,
     request). Returns (params, qparams, meta).
 
     Dense path: weight-quant sites applied as fake-quant (QAT numerics).
-    Compressed path: routed projections replaced by a keep-all Subnet's
-    integer codes + scales (`servable_params`), with `residual_qparams`
-    keeping fake-quant sites for the weights that stay dense so both paths
-    share numerics. `compressed` implies quantization — a half-quantized
-    model would match neither baseline."""
+    Compressed path: routed projections replaced by a Subnet's integer
+    codes + scales (`servable_params`), with `residual_qparams` keeping
+    fake-quant sites for the weights that stay dense so both paths share
+    numerics. `compressed` implies quantization — a half-quantized model
+    would match neither baseline.
+
+    Pruned path: `keep_masks` (a trained QASSO mask dict) or
+    `prune_sparsity` (synthesized magnitude masks) physically slices the
+    model first (`prune_lm`, mutating `lm` to its SlimPlan widths): params
+    shrink, decode reshapes at surviving-head counts, and init_cache
+    allocates the shrunk KV arena. Quantizers are resolved *before*
+    slicing, so the pruned model shares its scales with the masked dense
+    reference — the token-identity contract the parity tests pin. Pruning
+    composes with `compressed`: the sliced weights are then quantized to
+    int codes (the dequant epilogue runs on pruned shapes)."""
     if qparams is None and (quantized or compressed):
         qparams = lm.init_qparams(params, bits_init=bits_init)
     if not (quantized or compressed):
         qparams = None
     meta: dict[str, Any] = {}
+    if keep_masks is not None or prune_sparsity is not None:
+        params, plan = prune_lm(lm, params, keep_masks=keep_masks,
+                                sparsity=(prune_sparsity or 0.0))
+        meta["slim_plan"] = plan
+        meta["sparsity"] = plan.sparsity
     if compressed:
         subnet = compress_lm(lm, params, qparams)
-        meta = dict(subnet.meta)
+        for k, v in subnet.meta.items():
+            meta.setdefault(k, v)   # realized pruning sparsity wins over
+            # compress_lm's keep-all 0.0
         params = servable_params(subnet)
         qparams = residual_qparams(subnet, qparams)
+    meta["param_bytes"] = tree_bytes(params)
     return params, qparams, meta
 
 
 def compression_report(arch: str, meta: dict) -> str:
-    """One-line summary of a `prepare_serving(compressed=True)` meta dict,
-    shared by every serving CLI so the report format can't drift."""
-    return (f"{arch}: compressed {meta['n_sites']} sites to "
-            f"{meta['mean_bits']:.1f} mean bits "
-            f"({meta['weight_bytes_dense']/2**20:.1f} MiB -> "
-            f"{meta['weight_bytes_compressed']/2**20:.1f} MiB)")
+    """One-line summary of a `prepare_serving` meta dict, shared by every
+    serving CLI so the report format can't drift. Prints whichever of the
+    quantization / pruning / realized-bytes figures the meta carries
+    (param bytes are the served dict as resolved; kv_bytes is stamped by
+    the engine once the arena exists)."""
+    parts = []
+    if meta.get("n_sites"):
+        parts.append(f"compressed {meta['n_sites']} sites to "
+                     f"{meta['mean_bits']:.1f} mean bits "
+                     f"({meta['weight_bytes_dense']/2**20:.1f} MiB -> "
+                     f"{meta['weight_bytes_compressed']/2**20:.1f} MiB)")
+    if meta.get("skipped_sites"):
+        parts.append(f"{len(meta['skipped_sites'])} non-routed sites "
+                     f"kept dense")
+    if meta.get("sparsity"):
+        parts.append(f"pruned to sparsity {meta['sparsity']:.2f}")
+    if "param_bytes" in meta:
+        parts.append(f"served params {meta['param_bytes']/2**20:.2f} MiB")
+    if "kv_bytes" in meta:
+        parts.append(f"KV arena {meta['kv_bytes']/2**20:.2f} MiB")
+    return f"{arch}: " + "; ".join(parts or ["no compression applied"])
 
 
 def servable_params(subnet: Subnet) -> dict:

@@ -43,7 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.subnet import compression_report, prepare_serving
+from repro.core.subnet import (compression_report, prepare_serving,
+                               tree_bytes)
 from repro.data.synthetic import batch_for
 from repro.models.transformer import LM
 
@@ -97,6 +98,7 @@ class Engine:
         self.stats = {"decode_steps": 0, "decode_tokens": 0, "decode_s": 0.0,
                       "prefills": 0, "prefill_tokens": 0, "prefill_s": 0.0,
                       "admitted": 0, "evicted": 0}
+        self.serving_meta: dict = {}   # prepare_serving meta (build_engine)
 
         def _prefill(params, qparams, tokens):
             caches = lm.init_cache(1, max_seq, dtype=dt)
@@ -309,21 +311,68 @@ class Engine:
                                / max(s["decode_steps"] * self.max_slots, 1)),
         }
 
+    def kv_bytes(self) -> int:
+        """Bytes the slot arena pins in HBM. A pruned model's arena only
+        holds rows for surviving kv heads / mamba channels / rwkv heads
+        (LM.init_cache sizes from the SlimPlan shapes), so this shrinks
+        with realized sparsity."""
+        return tree_bytes(self.caches)
+
+    def param_bytes(self) -> int:
+        """Bytes of the served param dict (codes + scales + dense rest)."""
+        return tree_bytes(self.params)
+
 
 # ----------------------------------------------------------------- drivers
 def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
-                 compressed: bool = False, max_slots: int = 4,
-                 max_seq: int = 64, seed: int = 0,
+                 compressed: bool = False, pruned: bool = False,
+                 sparsity: float = 0.5, keep_masks: dict | None = None,
+                 max_slots: int = 4, max_seq: int = 64, seed: int = 0,
                  verbose: bool = False) -> tuple[Engine, LM]:
-    """Init an LM at `arch` scale and wrap it in an Engine."""
+    """Init an LM at `arch` scale and wrap it in an Engine.
+
+    `pruned` serves the physically sliced subnet: `prepare_serving` builds
+    keep masks (`keep_masks` from a GETA run, or magnitude masks at
+    `sparsity`), materializes the sliced params, and installs the SlimPlan
+    on `lm` — so this engine's decode dispatches, and its KV arena, run at
+    the surviving widths. Passing `keep_masks` implies `pruned` (a mask
+    dict that silently did nothing — or pruned under a dense label —
+    would be worse than either behavior). Composes with `compressed`
+    (int codes on pruned shapes)."""
+    pruned = pruned or keep_masks is not None
     cfg = get_arch(arch, smoke=smoke)
     lm = LM(cfg)
     params, _ = lm.init(jax.random.PRNGKey(seed))
     params, qparams, meta = prepare_serving(
-        lm, params, quantized=quantized, compressed=compressed)
-    if verbose and compressed:
+        lm, params, quantized=quantized, compressed=compressed,
+        keep_masks=keep_masks,
+        prune_sparsity=(sparsity if pruned and keep_masks is None else None))
+    eng = Engine(lm, params, qparams, max_slots=max_slots, max_seq=max_seq)
+    meta["kv_bytes"] = eng.kv_bytes()
+    eng.serving_meta = meta
+    if verbose and (compressed or pruned):
         print(compression_report(arch, meta))
-    return Engine(lm, params, qparams, max_slots=max_slots,
+    return eng, lm
+
+
+def build_masked_reference_engine(arch: str, smoke: bool = True, *,
+                                  sparsity: float = 0.5,
+                                  quantized: bool = True, max_slots: int = 4,
+                                  max_seq: int = 64, seed: int = 0
+                                  ) -> tuple[Engine, LM]:
+    """The pruned path's correctness oracle: the same model served dense
+    and keep-all, with the same magnitude masks *multiplied in* instead of
+    sliced away. Shares seed, masks and quantizer init with
+    `build_engine(pruned=True)`, so decode must be token-identical — the
+    CI smoke and `tests/test_slim_serving.py` assert exactly that."""
+    from repro.core.subnet import resolve_keep_masks
+    cfg = get_arch(arch, smoke=smoke)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(seed))
+    qparams = lm.init_qparams(params) if quantized else None
+    qadg, masks = resolve_keep_masks(lm, params, sparsity)
+    masked = qadg.space.apply_masks(params, masks)
+    return Engine(lm, masked, qparams, max_slots=max_slots,
                   max_seq=max_seq), lm
 
 
@@ -341,22 +390,27 @@ def synthetic_prompts(cfg, prompt_lens: list[int], seed: int = 0
 
 def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
                  *, quantized: bool = True, compressed: bool = False,
+                 pruned: bool = False, sparsity: float = 0.5,
                  max_slots: int = 4, seed: int = 0, verbose: bool = True,
                  stats: dict | None = None) -> dict[int, np.ndarray]:
     """Submit one request per prompt length, run to drain, report tok/s."""
     max_seq = max(prompt_lens) + gen
     eng, lm = build_engine(arch, smoke, quantized=quantized,
-                           compressed=compressed, max_slots=max_slots,
+                           compressed=compressed, pruned=pruned,
+                           sparsity=sparsity, max_slots=max_slots,
                            max_seq=max_seq, seed=seed, verbose=verbose)
     for p in synthetic_prompts(lm.cfg, prompt_lens, seed):
         eng.submit(p, gen)
     eng.warmup()
     out = eng.run()
     if stats is not None:
-        stats.update(eng.stats, **eng.throughput())
+        stats.update(eng.stats, **eng.throughput(),
+                     param_bytes=eng.param_bytes(), kv_bytes=eng.kv_bytes())
     if verbose:
         th = eng.throughput()
         mode = "compressed" if compressed else "dense"
+        if pruned:
+            mode += f"+pruned@{eng.serving_meta.get('sparsity', 0.0):.2f}"
         print(f"{arch} [engine/{mode}]: {len(prompt_lens)} requests "
               f"({', '.join(str(n) for n in prompt_lens)} prompt tokens, "
               f"{gen} new each) on {max_slots} slots — "

@@ -58,20 +58,24 @@ def make_serve_step(lm: LM):
 
 def serve_loop(arch: str, smoke: bool, batch: int, prompt_len: int,
                gen: int, seed: int = 0, quantized: bool = True,
-               compressed: bool = False, verbose: bool = True,
+               compressed: bool = False, pruned: bool = False,
+               sparsity: float = 0.5, verbose: bool = True,
                stats: dict | None = None, prompts=None):
     """Static lockstep reference: decode `gen` tokens after a *sequential*
     per-token prefill; returns the (batch, gen) token matrix. If `stats`
     is given it receives decode-only timing (the prefill warms the jit, so
     compile/init never pollute it). `prompts` overrides the synthetic
     (batch, prompt_len) prompt matrix — `tests/test_engine.py` feeds the
-    identical requests through this loop and the engine with it."""
+    identical requests through this loop and the engine with it. `pruned`
+    decodes the physically sliced subnet at magnitude masks of `sparsity`
+    (the shrunk KV arena included)."""
     cfg = get_arch(arch, smoke=smoke)
     lm = LM(cfg)
     params, _ = lm.init(jax.random.PRNGKey(seed))
     params, qparams, meta = prepare_serving(
-        lm, params, quantized=quantized, compressed=compressed)
-    if compressed and verbose:
+        lm, params, quantized=quantized, compressed=compressed,
+        prune_sparsity=(sparsity if pruned else None))
+    if (compressed or pruned) and verbose:
         print(compression_report(arch, meta))
     if prompts is None:
         prompts = batch_for(cfg, seed, 0, batch, prompt_len)["tokens"]
@@ -110,6 +114,46 @@ def serve_loop(arch: str, smoke: bool, batch: int, prompt_len: int,
     return seq
 
 
+def pruned_parity_check(arch: str, smoke: bool, prompt_lens: list[int],
+                        gen: int, *, sparsity: float, quantized: bool,
+                        compressed: bool = False, max_slots: int,
+                        seed: int = 0, verbose: bool = True) -> dict:
+    """Assert the pruned engine's decode is token-identical to the masked
+    dense reference (same seed, masks and quantizer init; zeroed units
+    contribute exact zeros, so slicing them away must not change a single
+    greedy token). Raises AssertionError on divergence — this is the CI
+    smoke for `serve --pruned --smoke`. Returns the pruned engine's
+    output, so the caller reports throughput without decoding a second
+    engine."""
+    import numpy as np
+
+    from repro.launch.engine import (build_masked_reference_engine,
+                                     engine_serve, synthetic_prompts)
+    max_seq = max(prompt_lens) + gen
+    # `compressed` implies quantization on the pruned arm (prepare_serving
+    # resolves qparams either way), so the reference must quantize too or
+    # the two arms would run different numerics under --no-quant
+    ref, lm = build_masked_reference_engine(
+        arch, smoke, sparsity=sparsity,
+        quantized=(quantized or compressed),
+        max_slots=max_slots, max_seq=max_seq, seed=seed)
+    for p in synthetic_prompts(lm.cfg, prompt_lens, seed):
+        ref.submit(p, gen)
+    want = ref.run()
+    got = engine_serve(arch, smoke, prompt_lens, gen, quantized=quantized,
+                       compressed=compressed, pruned=True, sparsity=sparsity,
+                       max_slots=max_slots, seed=seed, verbose=verbose)
+    assert sorted(got) == sorted(want), (sorted(got), sorted(want))
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"pruned decode diverged from masked reference "
+                    f"(request {rid})")
+    print(f"{arch}: pruned decode (sparsity {sparsity:.2f}) token-identical "
+          f"to the masked dense reference over {len(want)} requests")
+    return got
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -135,6 +179,15 @@ def main():
                     help="decode from Subnet int codes via the quant-dequant "
                          "GEMM epilogue instead of dense params (implies "
                          "quantization; overrides --no-quant)")
+    ap.add_argument("--pruned", action="store_true", default=False,
+                    help="physically slice the model to magnitude masks at "
+                         "--sparsity and serve the pruned shapes (smaller "
+                         "GEMMs + shrunk KV arena); in --smoke mode also "
+                         "asserts decode tokens are identical to the masked "
+                         "dense reference")
+    ap.add_argument("--sparsity", type=float, default=0.5,
+                    help="pruned mode: target fraction of prunable units "
+                         "removed (default 0.5)")
     args = ap.parse_args()
     cfg = get_arch(args.arch, smoke=args.smoke)
     if not args.static and (cfg.num_codebooks or cfg.vision_patches):
@@ -146,15 +199,27 @@ def main():
     if args.static:
         serve_loop(args.arch, args.smoke, args.batch, args.prompt_len,
                    args.gen, quantized=args.quantized,
-                   compressed=args.compressed)
+                   compressed=args.compressed, pruned=args.pruned,
+                   sparsity=args.sparsity)
         return
     from repro.launch.engine import engine_serve
     if args.prompt_lens:
         lens = [int(x) for x in args.prompt_lens.split(",")]
     else:
         lens = [args.prompt_len] * args.batch
+    if args.pruned and args.smoke:
+        # CI smoke contract: pruned decode == masked dense reference,
+        # token for token. The check's pruned arm *is* the serving run
+        # (it prints the throughput report), so nothing decodes twice.
+        pruned_parity_check(args.arch, args.smoke, lens, args.gen,
+                            sparsity=args.sparsity,
+                            quantized=args.quantized,
+                            compressed=args.compressed,
+                            max_slots=args.slots)
+        return
     engine_serve(args.arch, args.smoke, lens, args.gen,
                  quantized=args.quantized, compressed=args.compressed,
+                 pruned=args.pruned, sparsity=args.sparsity,
                  max_slots=args.slots)
 
 

@@ -38,6 +38,44 @@ _KERNEL_DISPATCH = {"enabled": True}
 ROUTED_COMPONENTS = ("attn", "mlp", "mamba", "rwkv", "shared")
 
 
+@dataclasses.dataclass(frozen=True)
+class LayerShapes:
+    """Physical dims one sublayer executes at.
+
+    The global `ModelConfig` states the *architecture*; a pruned subnet
+    executes at *smaller* per-sublayer widths (surviving kv-head groups,
+    MLP hidden units, experts, mamba channels, rwkv heads). Every apply
+    below reshapes/derives against these dims, so the same layer code
+    serves the dense model (`LayerShapes.from_config`) and a physically
+    sliced one (`core.subnet.derive_slim_plan`). `d_model` is the residual
+    width — non-prunable in every LM graph (embed/head pin it), carried
+    anyway so the invariant is explicit.
+    """
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_head: int = 0
+    d_ff: int = 0
+    n_experts: int = 0
+    mamba_inner: int = 0
+    rwkv_heads: int = 0
+    cm_hidden: int = 0
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig) -> "LayerShapes":
+        return cls(
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head,
+            d_ff=cfg.d_ff,
+            n_experts=cfg.moe.n_experts if cfg.moe else 0,
+            mamba_inner=cfg.mamba.expand * cfg.d_model if cfg.mamba else 0,
+            rwkv_heads=(cfg.d_model // cfg.rwkv.head_size) if cfg.rwkv else 0,
+            cm_hidden=cfg.d_ff,
+        )
+
+
 def set_kernel_dispatch(enabled: bool) -> None:
     _KERNEL_DISPATCH["enabled"] = bool(enabled)
 
@@ -302,11 +340,15 @@ def init_attention(key, cfg: ModelConfig, prefix: str, n_layers: int,
 
 def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
                rope: tuple, window: int = 0, prefix: str,
-               cache: Optional[tuple] = None, q_offset: int = 0):
+               cache: Optional[tuple] = None, q_offset: int = 0,
+               shapes: Optional[LayerShapes] = None):
     """lp: per-layer (unstacked) params view. cache: (k_cache, v_cache,
-    write_pos) for decode. Returns (out, new_cache)."""
+    write_pos) for decode. `shapes` carries this sublayer's physical dims
+    (pruned subnets run fewer heads than the config states); default is
+    the dense config. Returns (out, new_cache)."""
     B, S, D = x.shape
-    H, KVh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    shapes = shapes or LayerShapes.from_config(cfg)
+    H, KVh, dh = shapes.n_heads, shapes.n_kv_heads, shapes.d_head
     q = dense_proj(x, lp, qp, f"{prefix}.wq")
     k = dense_proj(x, lp, qp, f"{prefix}.wk")
     v = dense_proj(x, lp, qp, f"{prefix}.wv")
@@ -431,7 +473,8 @@ def init_moe(key, cfg: ModelConfig, prefix: str, n_layers: int, dtype
 
 
 def moe_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
-              prefix: str, full_capacity: bool = False):
+              prefix: str, full_capacity: bool = False,
+              shapes: Optional[LayerShapes] = None):
     """Top-k token-choice MoE, GShard-style grouped einsum dispatch.
 
     Tokens are split into G groups (one per sequence) with *per-group*
@@ -451,7 +494,12 @@ def moe_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
     GSPMD lower dispatch/combine to all-to-all (the §Perf EP lever).
     """
     B, S, D = x.shape
-    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    shapes = shapes or LayerShapes.from_config(cfg)
+    E, K = shapes.n_experts, cfg.moe.top_k
+    if E < K:
+        raise ValueError(f"{prefix}: {E} surviving experts < top_k={K} — "
+                         f"the expert family was pruned below the router's "
+                         f"top-k (keep at least top_k experts)")
     G, n = B, S
     xg = x.reshape(G, n, D)
     logits = (xg @ qw(lp, qp, f"{prefix}.router")).astype(jnp.float32)
@@ -569,12 +617,15 @@ def _mamba_chunk_scan(xc, dt, Bc, Cc, A, D_vec, h0, chunk=64):
 
 
 def mamba_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
-                prefix: str, state: Optional[tuple] = None):
+                prefix: str, state: Optional[tuple] = None,
+                shapes: Optional[LayerShapes] = None):
     """Selective SSM block. state = (h (B,Di,N), conv (B,K-1,Di)) for decode.
+    Di comes from `shapes` (pruned subnets keep fewer inner channels).
     Returns (out, new_state)."""
     B, S, D = x.shape
     mc = cfg.mamba
-    Di = mc.expand * D
+    shapes = shapes or LayerShapes.from_config(cfg)
+    Di = shapes.mamba_inner
     N = mc.d_state
     Kc = mc.d_conv
 
@@ -717,15 +768,18 @@ def _wkv_scan(r, k, v, w, u, s0, chunk: int = 64):
 
 
 def rwkv_timemix_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
-                       prefix: str, state: Optional[tuple] = None):
+                       prefix: str, state: Optional[tuple] = None,
+                       shapes: Optional[LayerShapes] = None):
     """RWKV6 (Finch) time-mix with data-dependent decay.
 
-    state = (shift_last (B,D), wkv_state (B,H,dh,dh)). Returns (out, state).
+    state = (shift_last (B,D), wkv_state (B,H,dh,dh)); H comes from
+    `shapes` (pruned subnets keep fewer heads). Returns (out, state).
     """
     B, S, D = x.shape
     rc = cfg.rwkv
     dh = rc.head_size
-    H = D // dh
+    shapes = shapes or LayerShapes.from_config(cfg)
+    H = shapes.rwkv_heads
     last = state[0] if state is not None else None
     xs = _token_shift(x, last)
     mu = lp[f"{prefix}.mu"].astype(jnp.float32)  # (5, D)
@@ -752,7 +806,7 @@ def rwkv_timemix_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
     s0 = jnp.zeros((B, H, dh, dh), jnp.float32) if state is None \
         else state[1]
     y, s_last = _wkv_scan(r, k, v, w, u, s0, chunk=rc.chunk)
-    y = groupnorm_heads(y.reshape(B, S, D).astype(x.dtype),
+    y = groupnorm_heads(y.reshape(B, S, H * dh).astype(x.dtype),
                         lp[f"{prefix}.lnx_scale"], lp[f"{prefix}.lnx_bias"],
                         H, cfg.norm_eps)
     y = (y.astype(jnp.float32) * g).astype(x.dtype)

@@ -95,6 +95,16 @@ class LM:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         self.plan, self.n_blocks = layer_plan(cfg)
+        # Physical dims per position-in-period. The forward/prefill/decode
+        # bodies and init_cache consume these instead of the global config,
+        # so a pruned subnet (core.subnet.derive_slim_plan) executes — and
+        # allocates KV — at its sliced widths. Per-stack pruning granularity
+        # (DESIGN.md §2.2) means every layer of a stack shares its
+        # position's shapes: the layer scan stays shape-homogeneous and the
+        # compiled-shape set is bounded by the period.
+        self.shapes: list[Lyr.LayerShapes] = [
+            Lyr.LayerShapes.from_config(cfg) for _ in self.plan]
+        self.slim_plan = None
         # Optional NamedSharding for the (B, S, D) residual stream. Without
         # this pin, GSPMD's fixed-point for the scan carry can settle on
         # (batch-replicated, D-model-sharded) — measured 16x activation
@@ -110,6 +120,20 @@ class LM:
         if self.act_sharding is not None and x.ndim == 3:
             x = jax.lax.with_sharding_constraint(x, self.act_sharding)
         return x
+
+    def apply_slim_plan(self, plan) -> None:
+        """Execute at a `core.subnet.SlimPlan`'s physical widths.
+
+        After this, forward/prefill/decode_step expect *sliced* params
+        (`PruningSpace.materialize` output) and init_cache allocates the
+        shrunk KV/state arena (surviving kv heads / mamba channels / rwkv
+        heads only)."""
+        if len(plan.layer_shapes) != len(self.plan):
+            raise ValueError(
+                f"slim plan has {len(plan.layer_shapes)} sublayer shapes, "
+                f"model period has {len(self.plan)}")
+        self.shapes = list(plan.layer_shapes)
+        self.slim_plan = plan
 
     # ------------------------------------------------------------- params
     def init(self, key) -> tuple[dict, dict]:
@@ -287,20 +311,20 @@ class LM:
 
         def body(x, lp):
             x = self._constrain(x)
-            for sub in self.plan:
+            for sub, shp in zip(self.plan, self.shapes):
                 pre = f"blocks.{sub.j}"
                 h = Lyr.rmsnorm(x, lp[f"{pre}.norm1"], cfg.norm_eps)
                 if sub.mixer == "attn":
-                    win = cfg.window if cfg.family == "hybrid" else cfg.window
                     mix, _ = Lyr.attn_apply(
-                        lp, qp_body, cfg, h, rope=rope, window=win,
-                        prefix=f"{pre}.attn")
+                        lp, qp_body, cfg, h, rope=rope, window=cfg.window,
+                        prefix=f"{pre}.attn", shapes=shp)
                 elif sub.mixer == "mamba":
                     mix, _ = Lyr.mamba_apply(lp, qp_body, cfg, h,
-                                             prefix=f"{pre}.mamba")
+                                             prefix=f"{pre}.mamba", shapes=shp)
                 else:
                     mix, _ = Lyr.rwkv_timemix_apply(lp, qp_body, cfg, h,
-                                                    prefix=f"{pre}.rwkv")
+                                                    prefix=f"{pre}.rwkv",
+                                                    shapes=shp)
                 x = x + mix
                 if sub.ffn == "none":
                     continue
@@ -308,7 +332,8 @@ class LM:
                 if sub.ffn == "mlp":
                     f = Lyr.mlp_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.mlp")
                 elif sub.ffn == "moe":
-                    f = Lyr.moe_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.moe")
+                    f = Lyr.moe_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.moe",
+                                      shapes=shp)
                 else:
                     f, _ = Lyr.rwkv_chanmix_apply(lp, qp_body, cfg, h2,
                                                   prefix=f"{pre}.rwkv")
@@ -377,26 +402,30 @@ class LM:
 
     # ------------------------------------------------------------- serving
     def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        """Decode cache arena, sized from the per-sublayer shapes — a
+        pruned subnet allocates KV rows for *surviving* kv heads (and
+        mamba channels / rwkv heads) only, so the HBM the arena pins
+        shrinks with realized sparsity, not just the weight bytes."""
         cfg = self.cfg
         caches = {}
-        for sub in self.plan:
+        for sub, shp in zip(self.plan, self.shapes):
             pre = f"blocks.{sub.j}"
             nb = self.n_blocks
             if sub.mixer == "attn":
                 S = min(max_seq, cfg.window) if cfg.window > 0 else max_seq
                 caches[f"{pre}.k"] = jnp.zeros(
-                    (nb, batch, S, cfg.n_kv_heads, cfg.d_head), dtype)
+                    (nb, batch, S, shp.n_kv_heads, shp.d_head), dtype)
                 caches[f"{pre}.v"] = jnp.zeros(
-                    (nb, batch, S, cfg.n_kv_heads, cfg.d_head), dtype)
+                    (nb, batch, S, shp.n_kv_heads, shp.d_head), dtype)
             elif sub.mixer == "mamba":
-                Di = cfg.mamba.expand * cfg.d_model
+                Di = shp.mamba_inner
                 caches[f"{pre}.h"] = jnp.zeros(
                     (nb, batch, Di, cfg.mamba.d_state), jnp.float32)
                 caches[f"{pre}.conv"] = jnp.zeros(
                     (nb, batch, cfg.mamba.d_conv - 1, Di), dtype)
             else:  # rwkv
-                D = cfg.d_model
-                H = D // cfg.rwkv.head_size
+                D = shp.d_model
+                H = shp.rwkv_heads
                 dh = cfg.rwkv.head_size
                 caches[f"{pre}.tm_shift"] = jnp.zeros((nb, batch, D),
                                                       jnp.float32)
@@ -428,23 +457,23 @@ class LM:
             lp = inp["p"]
             cc = inp["c"]
             new_c = {}
-            for sub in self.plan:
+            for sub, shp in zip(self.plan, self.shapes):
                 pre = f"blocks.{sub.j}"
                 h = Lyr.rmsnorm(x, lp[f"{pre}.norm1"], cfg.norm_eps)
                 if sub.mixer == "attn":
                     mix, nc = Lyr.attn_apply(
                         lp, qp_body, cfg, h, rope=rope, window=cfg.window,
-                        prefix=f"{pre}.attn",
+                        prefix=f"{pre}.attn", shapes=shp,
                         cache=(cc[f"{pre}.k"], cc[f"{pre}.v"], pos))
                     new_c[f"{pre}.k"], new_c[f"{pre}.v"], _ = nc
                 elif sub.mixer == "mamba":
                     mix, ns = Lyr.mamba_apply(
-                        lp, qp_body, cfg, h, prefix=f"{pre}.mamba",
+                        lp, qp_body, cfg, h, prefix=f"{pre}.mamba", shapes=shp,
                         state=(cc[f"{pre}.h"], cc[f"{pre}.conv"]))
                     new_c[f"{pre}.h"], new_c[f"{pre}.conv"] = ns
                 else:
                     mix, ns = Lyr.rwkv_timemix_apply(
-                        lp, qp_body, cfg, h, prefix=f"{pre}.rwkv",
+                        lp, qp_body, cfg, h, prefix=f"{pre}.rwkv", shapes=shp,
                         state=(cc[f"{pre}.tm_shift"], cc[f"{pre}.wkv"]))
                     new_c[f"{pre}.tm_shift"], new_c[f"{pre}.wkv"] = ns
                 x = x + mix
@@ -454,7 +483,8 @@ class LM:
                 if sub.ffn == "mlp":
                     f = Lyr.mlp_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.mlp")
                 elif sub.ffn == "moe":
-                    f = Lyr.moe_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.moe")
+                    f = Lyr.moe_apply(lp, qp_body, cfg, h2, prefix=f"{pre}.moe",
+                                      shapes=shp)
                 else:
                     f, ns = Lyr.rwkv_chanmix_apply(
                         lp, qp_body, cfg, h2, prefix=f"{pre}.rwkv",
@@ -508,23 +538,25 @@ class LM:
             lp = inp["p"]
             cc = inp["c"]
             new_c = {}
-            for sub in self.plan:
+            for sub, shp in zip(self.plan, self.shapes):
                 pre = f"blocks.{sub.j}"
                 h = Lyr.rmsnorm(x, lp[f"{pre}.norm1"], cfg.norm_eps)
                 if sub.mixer == "attn":
                     mix, nc = Lyr.attn_apply(
                         lp, qp_body, cfg, h, rope=rope, window=cfg.window,
-                        prefix=f"{pre}.attn",
+                        prefix=f"{pre}.attn", shapes=shp,
                         cache=(cc[f"{pre}.k"], cc[f"{pre}.v"],
                                jnp.zeros((), jnp.int32)))
                     new_c[f"{pre}.k"], new_c[f"{pre}.v"], _ = nc
                 elif sub.mixer == "mamba":
                     mix, ns = Lyr.mamba_apply(lp, qp_body, cfg, h,
-                                              prefix=f"{pre}.mamba")
+                                              prefix=f"{pre}.mamba",
+                                              shapes=shp)
                     new_c[f"{pre}.h"], new_c[f"{pre}.conv"] = ns
                 else:
                     mix, ns = Lyr.rwkv_timemix_apply(lp, qp_body, cfg, h,
-                                                     prefix=f"{pre}.rwkv")
+                                                     prefix=f"{pre}.rwkv",
+                                                     shapes=shp)
                     new_c[f"{pre}.tm_shift"], new_c[f"{pre}.wkv"] = ns
                 x = x + mix
                 if sub.ffn == "none":
@@ -537,7 +569,8 @@ class LM:
                     # expert capacity (one-token decode can't overflow, so
                     # a dropping prefill would silently diverge from it)
                     f = Lyr.moe_apply(lp, qp_body, cfg, h2,
-                                      prefix=f"{pre}.moe", full_capacity=True)
+                                      prefix=f"{pre}.moe", full_capacity=True,
+                                      shapes=shp)
                 else:
                     f, ns = Lyr.rwkv_chanmix_apply(lp, qp_body, cfg, h2,
                                                    prefix=f"{pre}.rwkv")
