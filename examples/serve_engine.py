@@ -4,13 +4,15 @@ Submits a handful of requests with different prompt lengths and token
 budgets, drains the engine, and prints each request's generated tokens
 plus the throughput counters (decode tok/s, one-shot prefill tok/s, slot
 occupancy). `--compressed` serves from Subnet int8 codes through the
-quant-dequant GEMM epilogue; `--pruned` physically slices the model to
-magnitude masks first (surviving heads / MLP hidden / experts only — the
-GEMMs and the KV arena shrink with realized sparsity). Stacked, they are
-the full deployment path: int codes at pruned shapes.
+quant-dequant GEMM epilogue; `--packed` bit-packs the codes at their
+learned sub-byte storage widths (unpack-dequant epilogue, DESIGN.md
+§4.8); `--pruned` physically slices the model to magnitude masks first
+(surviving heads / MLP hidden / experts only — the GEMMs and the KV
+arena shrink with realized sparsity). Stacked, they are the full
+deployment path: sub-byte codes at pruned shapes.
 
-    PYTHONPATH=src python examples/serve_engine.py --compressed --pruned \
-        --prompt-lens 16,4,9,12 --gens 24,8,16,12 --slots 2
+    PYTHONPATH=src python examples/serve_engine.py --packed --pruned \
+        --bits 4 --prompt-lens 16,4,9,12 --gens 24,8,16,12 --slots 2
 """
 import argparse
 
@@ -31,6 +33,13 @@ def main():
     ap.add_argument("--compressed", action="store_true", default=False,
                     help="decode from Subnet int codes (quant-dequant GEMM "
                          "epilogue) instead of dense weights")
+    ap.add_argument("--packed", action="store_true", default=False,
+                    help="bit-pack the codes at each site's learned storage "
+                         "width (2/3/4/8) and decode via the unpack-dequant "
+                         "epilogue (implies --compressed)")
+    ap.add_argument("--bits", type=float, default=8.0,
+                    help="quantizer init width (e.g. 4 serves a genuinely "
+                         "4-bit packed artifact)")
     ap.add_argument("--pruned", action="store_true", default=False,
                     help="physically slice the model to magnitude masks at "
                          "--sparsity and serve the pruned shapes (smaller "
@@ -45,7 +54,8 @@ def main():
     assert len(gens) == len(lens), "--gens must match --prompt-lens"
 
     eng, lm = build_engine(args.arch, smoke=True, quantized=args.quant,
-                           compressed=args.compressed, pruned=args.pruned,
+                           compressed=args.compressed, packed=args.packed,
+                           bits_init=args.bits, pruned=args.pruned,
                            sparsity=args.sparsity, max_slots=args.slots,
                            max_seq=max(p + g for p, g in zip(lens, gens)),
                            verbose=True)

@@ -178,15 +178,29 @@ def _fake_quant_bwd(res, g):
 fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
 
 
-def quantize_int(x: jax.Array, qp: QuantParams) -> tuple[jax.Array, jax.Array]:
+def quantize_int(x: jax.Array, qp: QuantParams,
+                 bits: float | jax.Array | None = None
+                 ) -> tuple[jax.Array, jax.Array]:
     """Deployment-path quantization: integer codes + scale.
 
     Returns (codes int8/int16/int32 depending on derived bits, scale d).
-    Codes satisfy x_Q = codes * d (on the nonlinearly-mapped magnitude)."""
+    Codes satisfy x_Q = codes * d (on the nonlinearly-mapped magnitude).
+
+    Codes are clamped to the symmetric range of the ceil(bits)-wide
+    container, ±(2^(ceil(b)-1)-1): at the bit-constraint boundary (d
+    projected to exactly the layerwise b_u, then q_m nudged by a later
+    step) `round(xt/d)` can land on 2^(b-1) — e.g. 128 at 8 bits — which
+    would wrap negative in the narrow integer cast downstream. `bits`
+    overrides the derived width when the caller has already fixed the
+    container (default: Eq 3 on `qp`)."""
     d32 = jnp.maximum(qp.d.astype(jnp.float32), _EPS)
     sign = jnp.sign(x).astype(jnp.float32)
     xt = clip_qmt(jnp.abs(x).astype(jnp.float32), qp.q_m, qp.t)
     codes = jnp.round(xt / d32) * sign
+    b = bit_width(qp.d, qp.q_m, qp.t) if bits is None \
+        else jnp.asarray(bits, jnp.float32)
+    cmax = jnp.exp2(jnp.ceil(b) - 1.0) - 1.0
+    codes = jnp.clip(codes, -cmax, cmax)
     return codes, d32
 
 
@@ -203,6 +217,75 @@ def dequantize_int(codes: jax.Array, d: jax.Array,
 def storage_bits(qp: QuantParams) -> jax.Array:
     """Integer bits needed to store codes of this quantizer (ceil of Eq 3)."""
     return jnp.ceil(bit_width(qp.d, qp.q_m, qp.t))
+
+
+# ------------------------------------------------------- sub-byte packing
+# Storage widths the packed serving path realizes. A site whose learned
+# width lands between two entries rounds up to the next one (ceil 5..8 all
+# store at 8); widths above 8 keep their unpacked int16/int32 container.
+PACKED_STORAGE_BITS = (2, 3, 4, 8)
+
+
+def packed_storage_bits(bits: float) -> int | None:
+    """Packed container width for a learned bit width, or None if the
+    codes need more than 8 bits (stay on the unpacked int16/int32 path)."""
+    nb = int(jnp.ceil(jnp.asarray(bits, jnp.float32)))
+    for cand in PACKED_STORAGE_BITS:
+        if nb <= cand:
+            return cand
+    return None
+
+
+def _codes_per_word(bits: int) -> int:
+    if not 2 <= int(bits) <= 8:
+        raise ValueError(f"packed bits must be in [2, 8], got {bits}")
+    return 32 // int(bits)
+
+
+def pack_codes(codes: jax.Array, bits: int, *, axis: int = 0) -> jax.Array:
+    """Bit-pack signed integer codes into an int32 word stream.
+
+    Each 32-bit word holds ``32 // bits`` codes (16/10/8/4 for bits
+    2/3/4/8) as ``bits``-wide two's-complement fields, least-significant
+    field first, packed along `axis` (the reduction/K axis for weight
+    matrices, so the per-column scale epilogue is untouched). A trailing
+    partial word is zero-padded — zero codes dequantize to exact zeros,
+    so the padding is inert in any matmul whose LHS is zero-padded to
+    match. Codes must already fit ±(2^(bits-1)-1) (`quantize_int` clamps
+    to exactly that range)."""
+    bits = int(bits)
+    cpw = _codes_per_word(bits)
+    c = jnp.moveaxis(jnp.asarray(codes), axis, 0).astype(jnp.int32)
+    pad = (-c.shape[0]) % cpw
+    if pad:
+        c = jnp.pad(c, ((0, pad),) + ((0, 0),) * (c.ndim - 1))
+    mask = (1 << bits) - 1
+    c = (c & mask).reshape((c.shape[0] // cpw, cpw) + c.shape[1:])
+    shifts = (jnp.arange(cpw, dtype=jnp.int32) * bits).reshape(
+        (1, cpw) + (1,) * (c.ndim - 2))
+    # fields are disjoint, so the sum is a bitwise OR (int32 wraparound on
+    # the sign bit of the top field is the intended two's-complement word)
+    words = jnp.sum(c << shifts, axis=1, dtype=jnp.int32)
+    return jnp.moveaxis(words, 0, axis)
+
+
+def unpack_codes(packed: jax.Array, bits: int, size: int, *,
+                 axis: int = 0) -> jax.Array:
+    """Invert `pack_codes`: int32 words -> sign-extended int32 codes.
+
+    `size` is the unpadded code count along `axis` (the word stream holds
+    ceil(size / (32//bits)) words; the zero-filled tail is sliced off)."""
+    bits = int(bits)
+    cpw = _codes_per_word(bits)
+    w = jnp.moveaxis(jnp.asarray(packed, jnp.int32), axis, 0)
+    shifts = (jnp.arange(cpw, dtype=jnp.int32) * bits).reshape(
+        (1, cpw) + (1,) * (w.ndim - 1))
+    mask = (1 << bits) - 1
+    vals = (w[:, None] >> shifts) & mask
+    sgn = 1 << (bits - 1)
+    vals = (vals ^ sgn) - sgn   # sign-extend the bits-wide field
+    out = vals.reshape((w.shape[0] * cpw,) + w.shape[1:])[:size]
+    return jnp.moveaxis(out, 0, axis)
 
 
 def tree_bit_widths(qparams: dict[str, QuantParams]) -> dict[str, jax.Array]:

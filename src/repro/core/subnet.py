@@ -12,7 +12,10 @@ dict convention consumed by `models.layers.dense_proj` — each compressed
 model's matmuls then execute the dequant epilogue on the shared GEMM core
 (int codes stream HBM->VMEM, decode inside VMEM). `compress_lm()` builds
 such a Subnet for an LM without a pruning run (keep-all), which is what
-`python -m repro.launch.serve --compressed` uses.
+`python -m repro.launch.serve --compressed` uses. With `packed=True` the
+codes bit-pack along K at their learned sub-byte storage widths and ride
+the dict as `<name>.packed{bits}` word streams instead (`--packed`,
+DESIGN.md §4.8).
 """
 from __future__ import annotations
 
@@ -24,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.qadg import QADG
-from repro.core.quant import QuantParams, bit_width, quantize_int
+from repro.core.quant import (QuantParams, bit_width, pack_codes,
+                              packed_storage_bits, quantize_int)
 
 
 def tree_bytes(tree) -> int:
@@ -52,6 +56,10 @@ class Subnet:
     bits: dict[str, float]                  # site name -> bit width
     kept_units: dict[str, np.ndarray]       # family -> surviving unit ids
     meta: dict[str, Any]
+    # param name -> packed storage width: entries mark `int_weights[name]`
+    # as a K-packed int32 word stream (`core.quant.pack_codes` at that
+    # width) instead of a plain int container. Empty = unpacked subnet.
+    packed_bits: dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -89,7 +97,7 @@ def construct_subnet(qadg: QADG, params: dict, qparams: dict,
         for pname in site.quantized_params:
             if pname not in sliced:
                 continue
-            codes, d = quantize_int(sliced[pname], qp)
+            codes, d = quantize_int(sliced[pname], qp, bits=b)
             # narrowest container that holds the codes
             int_weights[pname] = codes.astype(_storage_dtype(b))
             scales[pname] = d
@@ -103,8 +111,18 @@ def construct_subnet(qadg: QADG, params: dict, qparams: dict,
         meta={
             "sparsity": 1.0 - n_kept / max(n_total, 1),
             "mean_bits": float(np.mean(list(bits.values()))) if bits else 32.0,
+            "mean_storage_bits": _mean_storage_bits(bits),
             "n_sites": len(qadg.sites),
         })
+
+
+def _mean_storage_bits(bits: dict[str, float]) -> float:
+    """Mean *integer* (ceil) bits over sites — the width the storage
+    containers are actually sized from, reported alongside the float
+    `mean_bits` so the report's bits and bytes figures agree."""
+    if not bits:
+        return 32.0
+    return float(np.mean([np.ceil(b) for b in bits.values()]))
 
 
 # ------------------------------------------------------------- slim plan
@@ -262,19 +280,36 @@ def _routed(name: str) -> bool:
 
 
 def compress_lm(lm, params: dict, qparams: dict,
-                components: tuple[str, ...] | None = None) -> Subnet:
+                components: tuple[str, ...] | None = None, *,
+                packed: bool = False) -> Subnet:
     """Quantize an LM's projection weights to int codes (no pruning).
 
     `lm` is a `models.transformer.LM`; `qparams` its weight-quant sites
     (`<name>.wq` -> QuantParams). Every routed quantizable weight — all
     `dense_proj` components (attn/mlp/mamba/rwkv/shared) by default,
     optionally narrowed via `components` — is replaced by integer codes +
-    a scale; everything else stays dense. Returns a keep-all Subnet."""
+    a scale; everything else stays dense. Returns a keep-all Subnet.
+
+    `packed` realizes sub-byte storage: each site's codes are bit-packed
+    along K (`core.quant.pack_codes`) at the narrowest width in
+    `PACKED_STORAGE_BITS` that holds its learned bit width, so a 4-bit
+    site occupies half — and a 2-bit site a quarter — of its int8
+    container's HBM bytes. Sites whose learned width exceeds 8 bits keep
+    the unpacked int16/int32 container. Per-site storage widths land in
+    `Subnet.packed_bits` and `meta["packed_sites"]`; `meta` carries both
+    the realized container bytes (`weight_bytes_compressed`) and the
+    unpacked-container floor (`weight_bytes_unpacked`).
+
+    Note: the meta intentionally does *not* claim a `sparsity` — this is
+    a keep-all quantization, and `compression_report` treats the key's
+    presence as "a pruning path ran" (an explicit 0.0 from `--sparsity 0`
+    must still print)."""
     int_weights: dict[str, jax.Array] = {}
     scales: dict[str, jax.Array] = {}
     bits: dict[str, float] = {}
+    packed_bits: dict[str, int] = {}
     dense = dict(params)
-    dense_bytes = quant_bytes = 0
+    dense_bytes = quant_bytes = unpacked_bytes = 0
     skipped: list[str] = []
     for name in lm.quant_weight_names():
         site = name + ".wq"
@@ -294,25 +329,33 @@ def compress_lm(lm, params: dict, qparams: dict,
             continue
         qp: QuantParams = qparams[site]
         b = float(bit_width(qp.d, qp.q_m, qp.t))
-        codes, d = quantize_int(params[name], qp)
+        codes, d = quantize_int(params[name], qp, bits=b)
         store = codes.astype(_storage_dtype(b))
+        unpacked_bytes += store.size * store.dtype.itemsize
+        sb = packed_storage_bits(b) if packed else None
+        if sb is not None:
+            store = pack_codes(codes, sb, axis=-2)
+            packed_bits[name] = sb
         int_weights[name] = store
         scales[name] = d
         bits[site] = b
         dense_bytes += params[name].size * params[name].dtype.itemsize
         quant_bytes += store.size * store.dtype.itemsize
         dense.pop(name)
+    meta = {
+        "mean_bits": float(np.mean(list(bits.values()))) if bits else 32.0,
+        "mean_storage_bits": _mean_storage_bits(bits),
+        "n_sites": len(bits),
+        "weight_bytes_dense": dense_bytes,
+        "weight_bytes_compressed": quant_bytes,
+        "skipped_sites": skipped,
+    }
+    if packed:
+        meta["weight_bytes_unpacked"] = unpacked_bytes
+        meta["packed_sites"] = dict(packed_bits)
     return Subnet(
         params=dense, int_weights=int_weights, scales=scales, bits=bits,
-        kept_units={},
-        meta={
-            "sparsity": 0.0,
-            "mean_bits": float(np.mean(list(bits.values()))) if bits else 32.0,
-            "n_sites": len(bits),
-            "weight_bytes_dense": dense_bytes,
-            "weight_bytes_compressed": quant_bytes,
-            "skipped_sites": skipped,
-        })
+        kept_units={}, meta=meta, packed_bits=packed_bits)
 
 
 def residual_qparams(subnet: Subnet, qparams: dict) -> Optional[dict]:
@@ -336,7 +379,7 @@ def residual_qparams(subnet: Subnet, qparams: dict) -> Optional[dict]:
 
 def prepare_serving(lm, params: dict, qparams: Optional[dict] = None, *,
                     quantized: bool = True, compressed: bool = False,
-                    bits_init: float = 8.0,
+                    packed: bool = False, bits_init: float = 8.0,
                     keep_masks: Optional[dict] = None,
                     prune_sparsity: Optional[float] = None
                     ) -> tuple[dict, Optional[dict], dict[str, Any]]:
@@ -360,7 +403,14 @@ def prepare_serving(lm, params: dict, qparams: Optional[dict] = None, *,
     slicing, so the pruned model shares its scales with the masked dense
     reference — the token-identity contract the parity tests pin. Pruning
     composes with `compressed`: the sliced weights are then quantized to
-    int codes (the dequant epilogue runs on pruned shapes)."""
+    int codes (the dequant epilogue runs on pruned shapes).
+
+    Packed path: `packed` (implies `compressed`) bit-packs each site's
+    codes at its learned sub-byte storage width (`compress_lm(packed=)`)
+    and serves `<name>.packed{bits}` containers — `param_bytes` then
+    reflects the packed word streams, and stacking with pruning yields
+    the full GETA deployment artifact (sliced shapes, sub-byte bytes)."""
+    compressed = compressed or packed
     if qparams is None and (quantized or compressed):
         qparams = lm.init_qparams(params, bits_init=bits_init)
     if not (quantized or compressed):
@@ -372,10 +422,9 @@ def prepare_serving(lm, params: dict, qparams: Optional[dict] = None, *,
         meta["slim_plan"] = plan
         meta["sparsity"] = plan.sparsity
     if compressed:
-        subnet = compress_lm(lm, params, qparams)
+        subnet = compress_lm(lm, params, qparams, packed=packed)
         for k, v in subnet.meta.items():
-            meta.setdefault(k, v)   # realized pruning sparsity wins over
-            # compress_lm's keep-all 0.0
+            meta.setdefault(k, v)   # pruning-path keys win on collision
         params = servable_params(subnet)
         qparams = residual_qparams(subnet, qparams)
     meta["param_bytes"] = tree_bytes(params)
@@ -392,12 +441,21 @@ def compression_report(arch: str, meta: dict) -> str:
     if meta.get("n_sites"):
         parts.append(f"compressed {meta['n_sites']} sites to "
                      f"{meta['mean_bits']:.1f} mean bits "
+                     f"({meta.get('mean_storage_bits', 8.0):.1f} storage) "
                      f"({meta['weight_bytes_dense']/2**20:.1f} MiB -> "
+                     f"{meta['weight_bytes_compressed']/2**20:.1f} MiB)")
+    if meta.get("packed_sites"):
+        parts.append(f"{len(meta['packed_sites'])} sites sub-byte packed "
+                     f"({meta['weight_bytes_unpacked']/2**20:.1f} MiB "
+                     f"unpacked -> "
                      f"{meta['weight_bytes_compressed']/2**20:.1f} MiB)")
     if meta.get("skipped_sites"):
         parts.append(f"{len(meta['skipped_sites'])} non-routed sites "
                      f"kept dense")
-    if meta.get("sparsity"):
+    # `is not None`, not truthiness: an explicit --pruned --sparsity 0 run
+    # (all-keep masks) still ran the pruning path and must say so;
+    # compress-only metas simply don't carry the key.
+    if meta.get("sparsity") is not None:
         parts.append(f"pruned to sparsity {meta['sparsity']:.2f}")
     if "param_bytes" in meta:
         parts.append(f"served params {meta['param_bytes']/2**20:.2f} MiB")
@@ -411,6 +469,9 @@ def servable_params(subnet: Subnet) -> dict:
 
     Compressed sites appear as `<name>.codes` (narrow int container,
     scan-stacked exactly like the dense tensor was) + `<name>.scale`;
+    packed sites (`Subnet.packed_bits`) as `<name>.packed{bits}` (int32
+    K-packed word stream — the storage width rides the *key*, so it stays
+    static through jit while the words scan over the layer axis);
     remaining params pass through. Feed the result anywhere a params dict
     is accepted (`LM.decode_step`, `LM.forward`)."""
     out = dict(subnet.params)
@@ -427,6 +488,8 @@ def servable_params(subnet: Subnet) -> dict:
         # drop the dense copy (construct_subnet keeps it in sliced params);
         # carrying both would invert the bandwidth win
         out.pop(name, None)
-        out[name + ".codes"] = codes
+        sb = subnet.packed_bits.get(name)
+        key = f"{name}.packed{sb}" if sb is not None else name + ".codes"
+        out[key] = codes
         out[name + ".scale"] = scale
     return out

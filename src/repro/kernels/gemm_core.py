@@ -26,13 +26,14 @@ Pallas kernel body *and* the xla-ref oracle backend.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant import _EPS, clip_qmt
+from repro.core.quant import _EPS, clip_qmt, unpack_codes
 from repro.kernels import dispatch
 
 DEFAULT_BLOCKS = (128, 128, 128)  # bm, bn, bk
@@ -48,11 +49,17 @@ class RhsOp:
            SCALAR ((1, 1) everywhere).
     apply: (w_f32, *operand_values) -> w_f32; operand values arrive as
            (1, bn) / (1, 1) f32 arrays (full-width (1, N) on xla-ref).
+    k_pack: >1 marks a bit-unpacking op: the RHS array is stored packed
+           along K (`k_pack` codes per int32 word), `apply` receives the
+           *raw integer* word tile of shape (bk/k_pack, bn) and must
+           return the decoded f32 (bk, bn) tile. Only the first op may
+           unpack (later ops see the dense decoded tile).
     """
     name: str
     kinds: tuple[str, ...]
     apply: Callable[..., jax.Array]
     operands: tuple[jax.Array, ...]
+    k_pack: int = 1
 
     def __post_init__(self):
         assert len(self.kinds) == len(self.operands), (self.name, self.kinds)
@@ -67,6 +74,32 @@ def col_mask(mask: jax.Array) -> RhsOp:
 def dequant(scale: jax.Array) -> RhsOp:
     """w = codes * scale[None, :] — int-code dequantization."""
     return RhsOp("dequant", (COL,), lambda w, s: w * s, (scale,))
+
+
+def unpack_dequant(bits: int, scale: jax.Array) -> RhsOp:
+    """Sub-byte decode: int32 K-packed words -> f32 codes * scale.
+
+    The RHS streams HBM->VMEM as `core.quant.pack_codes` words (32//bits
+    codes per word, LSB field first, packed along K); the tile is
+    unpacked — shift, mask, sign-extend — and dequantized entirely inside
+    VMEM, so a 4-bit site moves half the HBM bytes of its int8 container.
+    Composes with later COL ops (`col_mask`) exactly like `dequant`."""
+    bits = int(bits)
+    if not 2 <= bits <= 8:
+        raise ValueError(f"unpack_dequant bits must be in [2, 8]: {bits}")
+    cpw = 32 // bits
+
+    def apply(words, s):
+        # words: (Wk, n) int32 — raw packed tile (k_pack routes it here
+        # uncast); returns the decoded (Wk * cpw, n) f32 tile. The
+        # shift/mask/sign-extend decode lives in `core.quant.unpack_codes`
+        # only (pure jnp, kernel-body compatible), so the packing format
+        # has exactly one definition.
+        codes = unpack_codes(words, bits, words.shape[0] * cpw, axis=0)
+        return codes.astype(jnp.float32) * s
+
+    return RhsOp(f"unpack_dequant_b{bits}", (COL,), apply, (scale,),
+                 k_pack=cpw)
 
 
 def _fq_apply(w, dv, qmv, tv):
@@ -103,7 +136,9 @@ def _make_kernel(ops: tuple[RhsOp, ...]):
             o_ref[...] = jnp.zeros_like(o_ref)
 
         x = x_ref[...].astype(jnp.float32)
-        w = w_ref[...].astype(jnp.float32)
+        w = w_ref[...]
+        if not (ops and ops[0].k_pack > 1):
+            w = w.astype(jnp.float32)   # unpack ops consume the raw ints
         i = 0
         for op in ops:
             vals = [op_refs[i + j][...].astype(jnp.float32)
@@ -126,36 +161,57 @@ def gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,
     """y = x @ T(w) with T the composition of `rhs_ops`.
 
     x: (M, K); w: (K, N) (any dtype castable to f32, incl. int8/int16
-    codes). COL operands are (N,) vectors; SCALAR operands are scalars.
-    Pads every dim to block multiples once; output sliced back to (M, N).
+    codes) — or, when the first op carries `k_pack > 1` (`unpack_dequant`),
+    the K-packed int32 word stream of shape (ceil(K / k_pack), N). COL
+    operands are (N,) vectors; SCALAR operands are scalars. Pads every dim
+    to block multiples once; output sliced back to (M, N).
     """
     backend = dispatch.resolve(backend)
     M, K = x.shape
-    K2, N = w.shape
-    assert K == K2, (x.shape, w.shape)
+    k_pack = rhs_ops[0].k_pack if rhs_ops else 1
+    assert all(op.k_pack == 1 for op in rhs_ops[1:]), \
+        "only the leading RHS op may unpack"
+    Kw, N = w.shape
+    if k_pack > 1:
+        assert Kw == -(-K // k_pack), (x.shape, w.shape, k_pack)
+    else:
+        assert K == Kw, (x.shape, w.shape)
     out_dtype = out_dtype or x.dtype
 
     if backend == "xla-ref":
-        w32 = w.astype(jnp.float32)
+        w32 = w if k_pack > 1 else w.astype(jnp.float32)
         for op in rhs_ops:
             vals = [v.astype(jnp.float32).reshape(
                         (1, -1) if kind == COL else (1, 1))
                     for kind, v in zip(op.kinds, op.operands)]
             w32 = op.apply(w32, *vals)
+        if k_pack > 1:
+            w32 = w32[:K]   # drop the zero codes of the final partial word
         y = x.astype(jnp.float32) @ w32
         return y.astype(out_dtype)
 
     bm, bn, bk = _clamp_blocks(blocks, M, N, K)
+    if k_pack > 1:
+        # bk must cover whole words (the packed tile rides the same K grid
+        # axis at bk/k_pack rows) AND keep both tiles MXU-aligned: bk a
+        # multiple of the 128-lane x tiling and bk/k_pack a multiple of 8
+        # sublanes. lcm(k_pack*8, 128) satisfies both — a no-op 128 for
+        # bits 2/4/8, and 640 (64 words) for the bits=3 10-codes stream.
+        bk = math.lcm(k_pack * 8, max(bk, 128))
     pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
     xp = jnp.pad(x, ((0, pm), (0, pk))) if (pm or pk) else x
-    wp = jnp.pad(w, ((0, pk), (0, pn))) if (pk or pn) else w
     Mp, Kp = xp.shape
+    if k_pack > 1:
+        pkw, bkw = Kp // k_pack - Kw, bk // k_pack
+    else:
+        pkw, bkw = pk, bk
+    wp = jnp.pad(w, ((0, pkw), (0, pn))) if (pkw or pn) else w
     Np = wp.shape[1]
     grid = (Mp // bm, Np // bn, Kp // bk)
 
     in_specs = [
         pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bkw, bn), lambda i, j, k: (k, j)),
     ]
     operands = []
     for op in rhs_ops:

@@ -133,6 +133,19 @@ def quant_matmul_op(x, codes, scale, *, interpret=None, backend=None):
                     out_dtype=x.dtype)
 
 
+def packed_quant_matmul_op(x, packed, bits, scale, *, interpret=None,
+                           backend=None):
+    """y = x @ (unpack(packed; bits) * scale[None, :]) — sub-byte serving.
+
+    `packed` is the K-packed int32 word stream (`core.quant.pack_codes`,
+    ceil(K/(32//bits)) rows for x: (M, K)); `bits` is the static storage
+    width in [2, 8]. The words stream HBM->VMEM and decode inside VMEM via
+    the `unpack_dequant` epilogue — inference-only, like `quant_matmul_op`."""
+    backend = dispatch.resolve(backend, interpret)
+    return _gc.gemm(x, packed, (_gc.unpack_dequant(bits, scale),),
+                    backend=backend, out_dtype=x.dtype)
+
+
 # ------------------------------------------- fused fake-quant (+mask) matmul
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
 def _fq_matmul(x, w, d, q_m, t, backend):
@@ -214,4 +227,5 @@ fake_quant_bwd_ref = _ref.fake_quant_bwd_ref
 matmul_ref = _ref.matmul_ref
 masked_matmul_ref = _ref.masked_matmul_ref
 quant_matmul_ref = _ref.quant_matmul_ref
+packed_quant_matmul_ref = _ref.packed_quant_matmul_ref
 fq_matmul_ref = _ref.fq_matmul_ref

@@ -71,3 +71,14 @@ def quant_matmul_ref(x, codes, scale):
     """y = x @ (codes * scale[None, :]) — int8 weights, per-column scales."""
     w = codes.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def packed_quant_matmul_ref(x, packed, bits, scale):
+    """y = x @ (unpack(packed) * scale[None, :]) — sub-byte packed weights.
+
+    packed: (ceil(K / (32//bits)), N) int32 word stream from
+    `core.quant.pack_codes` (K-packed); unpacks to the (K, N) codes and
+    dequantizes — the oracle for the `unpack_dequant` GEMM epilogue."""
+    from repro.core.quant import unpack_codes
+    codes = unpack_codes(packed, bits, x.shape[-1], axis=0)
+    return quant_matmul_ref(x, codes, scale)

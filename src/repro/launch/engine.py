@@ -319,14 +319,19 @@ class Engine:
         return tree_bytes(self.caches)
 
     def param_bytes(self) -> int:
-        """Bytes of the served param dict (codes + scales + dense rest)."""
+        """Bytes of the served param dict (codes + scales + dense rest).
+
+        Counts the containers as served: a `--packed` engine's sub-byte
+        word streams weigh their packed bytes, so this tracks
+        `mean_bits` instead of flooring at the int8 container."""
         return tree_bytes(self.params)
 
 
 # ----------------------------------------------------------------- drivers
 def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
-                 compressed: bool = False, pruned: bool = False,
-                 sparsity: float = 0.5, keep_masks: dict | None = None,
+                 compressed: bool = False, packed: bool = False,
+                 pruned: bool = False, sparsity: float = 0.5,
+                 keep_masks: dict | None = None, bits_init: float = 8.0,
                  max_slots: int = 4, max_seq: int = 64, seed: int = 0,
                  verbose: bool = False) -> tuple[Engine, LM]:
     """Init an LM at `arch` scale and wrap it in an Engine.
@@ -338,14 +343,17 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
     the surviving widths. Passing `keep_masks` implies `pruned` (a mask
     dict that silently did nothing — or pruned under a dense label —
     would be worse than either behavior). Composes with `compressed`
-    (int codes on pruned shapes)."""
+    (int codes on pruned shapes) and `packed` (sub-byte word streams —
+    implies `compressed`; `bits_init` sets the quantizer init width, so
+    `bits_init=4` serves a genuinely 4-bit packed artifact)."""
     pruned = pruned or keep_masks is not None
+    compressed = compressed or packed
     cfg = get_arch(arch, smoke=smoke)
     lm = LM(cfg)
     params, _ = lm.init(jax.random.PRNGKey(seed))
     params, qparams, meta = prepare_serving(
         lm, params, quantized=quantized, compressed=compressed,
-        keep_masks=keep_masks,
+        packed=packed, bits_init=bits_init, keep_masks=keep_masks,
         prune_sparsity=(sparsity if pruned and keep_masks is None else None))
     eng = Engine(lm, params, qparams, max_slots=max_slots, max_seq=max_seq)
     meta["kv_bytes"] = eng.kv_bytes()
@@ -390,14 +398,16 @@ def synthetic_prompts(cfg, prompt_lens: list[int], seed: int = 0
 
 def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
                  *, quantized: bool = True, compressed: bool = False,
-                 pruned: bool = False, sparsity: float = 0.5,
+                 packed: bool = False, pruned: bool = False,
+                 sparsity: float = 0.5, bits_init: float = 8.0,
                  max_slots: int = 4, seed: int = 0, verbose: bool = True,
                  stats: dict | None = None) -> dict[int, np.ndarray]:
     """Submit one request per prompt length, run to drain, report tok/s."""
     max_seq = max(prompt_lens) + gen
     eng, lm = build_engine(arch, smoke, quantized=quantized,
-                           compressed=compressed, pruned=pruned,
-                           sparsity=sparsity, max_slots=max_slots,
+                           compressed=compressed, packed=packed,
+                           pruned=pruned, sparsity=sparsity,
+                           bits_init=bits_init, max_slots=max_slots,
                            max_seq=max_seq, seed=seed, verbose=verbose)
     for p in synthetic_prompts(lm.cfg, prompt_lens, seed):
         eng.submit(p, gen)
@@ -408,7 +418,9 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
                      param_bytes=eng.param_bytes(), kv_bytes=eng.kv_bytes())
     if verbose:
         th = eng.throughput()
-        mode = "compressed" if compressed else "dense"
+        mode = "compressed" if (compressed or packed) else "dense"
+        if packed:
+            mode += "+packed"
         if pruned:
             mode += f"+pruned@{eng.serving_meta.get('sparsity', 0.0):.2f}"
         print(f"{arch} [engine/{mode}]: {len(prompt_lens)} requests "

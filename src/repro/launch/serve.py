@@ -10,6 +10,11 @@ Two weight paths (both modes):
                   epilogue on the shared GEMM core (int8 streams HBM->VMEM,
                   `codes * scale` inside VMEM). This is the paper's BOPs
                   claim actually executed, not just counted.
+  --packed      — sub-byte storage on top of --compressed (implied): codes
+                  bit-pack along K into int32 word streams at each site's
+                  learned storage width (2/3/4/8), decoded in VMEM by the
+                  unpack-dequant epilogue — a 4-bit site moves half the
+                  HBM bytes of its int8 container (DESIGN.md §4.8).
 
 Two execution modes:
   engine (default) — `launch.engine.Engine`: request queue with
@@ -58,8 +63,9 @@ def make_serve_step(lm: LM):
 
 def serve_loop(arch: str, smoke: bool, batch: int, prompt_len: int,
                gen: int, seed: int = 0, quantized: bool = True,
-               compressed: bool = False, pruned: bool = False,
-               sparsity: float = 0.5, verbose: bool = True,
+               compressed: bool = False, packed: bool = False,
+               pruned: bool = False, sparsity: float = 0.5,
+               bits_init: float = 8.0, verbose: bool = True,
                stats: dict | None = None, prompts=None):
     """Static lockstep reference: decode `gen` tokens after a *sequential*
     per-token prefill; returns the (batch, gen) token matrix. If `stats`
@@ -74,8 +80,9 @@ def serve_loop(arch: str, smoke: bool, batch: int, prompt_len: int,
     params, _ = lm.init(jax.random.PRNGKey(seed))
     params, qparams, meta = prepare_serving(
         lm, params, quantized=quantized, compressed=compressed,
+        packed=packed, bits_init=bits_init,
         prune_sparsity=(sparsity if pruned else None))
-    if (compressed or pruned) and verbose:
+    if (compressed or packed or pruned) and verbose:
         print(compression_report(arch, meta))
     if prompts is None:
         prompts = batch_for(cfg, seed, 0, batch, prompt_len)["tokens"]
@@ -106,7 +113,9 @@ def serve_loop(arch: str, smoke: bool, batch: int, prompt_len: int,
         stats.update(decode_s=dt_s, tokens=toks,
                      tok_per_s=toks / max(dt_s, 1e-9))
     if verbose:
-        mode = "compressed" if compressed else "dense"
+        mode = "compressed" if (compressed or packed) else "dense"
+        if packed:
+            mode += "+packed"
         print(f"{arch} [static/{mode}]: generated {toks} tokens in "
               f"{dt_s:.2f}s ({toks/max(dt_s,1e-9):.1f} tok/s, "
               f"batch={batch})")
@@ -154,6 +163,43 @@ def pruned_parity_check(arch: str, smoke: bool, prompt_lens: list[int],
     return got
 
 
+def packed_parity_check(arch: str, smoke: bool, prompt_lens: list[int],
+                        gen: int, *, pruned: bool = False,
+                        sparsity: float = 0.5, bits_init: float = 8.0,
+                        max_slots: int, seed: int = 0,
+                        verbose: bool = True) -> dict:
+    """Assert the packed engine's decode is token-identical to the
+    unpacked int8 path. `unpack_codes(pack_codes(c, b), b)` is exact and
+    both arms share seed, scales and clamped codes, so the dequantized
+    weights — and every greedy token — must match bit-for-bit; a packing
+    or sign-extension regression shows up as divergence here. Stacks with
+    `pruned` (both arms then serve the same sliced shapes). Raises
+    AssertionError on divergence — the CI smoke for `serve --packed
+    --smoke`. Returns the packed engine's output (the serving run that
+    printed the throughput report)."""
+    import numpy as np
+
+    from repro.launch.engine import engine_serve
+    want = engine_serve(arch, smoke, prompt_lens, gen, compressed=True,
+                        packed=False, pruned=pruned, sparsity=sparsity,
+                        bits_init=bits_init, max_slots=max_slots, seed=seed,
+                        verbose=False)
+    got = engine_serve(arch, smoke, prompt_lens, gen, compressed=True,
+                       packed=True, pruned=pruned, sparsity=sparsity,
+                       bits_init=bits_init, max_slots=max_slots, seed=seed,
+                       verbose=verbose)
+    assert sorted(got) == sorted(want), (sorted(got), sorted(want))
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"packed decode diverged from the unpacked int8 "
+                    f"reference (request {rid})")
+    print(f"{arch}: packed decode token-identical to the unpacked int8 "
+          f"path over {len(want)} requests"
+          + (f" (pruned @ {sparsity:.2f})" if pruned else ""))
+    return got
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -179,6 +225,17 @@ def main():
                     help="decode from Subnet int codes via the quant-dequant "
                          "GEMM epilogue instead of dense params (implies "
                          "quantization; overrides --no-quant)")
+    ap.add_argument("--packed", action="store_true", default=False,
+                    help="store the codes as sub-byte packed int32 word "
+                         "streams and decode through the unpack-dequant "
+                         "epilogue (implies --compressed); in --smoke mode "
+                         "also asserts decode tokens are identical to the "
+                         "unpacked int8 path")
+    ap.add_argument("--bits", type=float, default=8.0,
+                    help="quantizer init width: the learned per-site bit "
+                         "widths start here, so --packed --bits 4 serves a "
+                         "genuinely 4-bit artifact (half the int8 container "
+                         "bytes; 2 -> a quarter)")
     ap.add_argument("--pruned", action="store_true", default=False,
                     help="physically slice the model to magnitude masks at "
                          "--sparsity and serve the pruned shapes (smaller "
@@ -199,14 +256,23 @@ def main():
     if args.static:
         serve_loop(args.arch, args.smoke, args.batch, args.prompt_len,
                    args.gen, quantized=args.quantized,
-                   compressed=args.compressed, pruned=args.pruned,
-                   sparsity=args.sparsity)
+                   compressed=args.compressed, packed=args.packed,
+                   pruned=args.pruned, sparsity=args.sparsity,
+                   bits_init=args.bits)
         return
     from repro.launch.engine import engine_serve
     if args.prompt_lens:
         lens = [int(x) for x in args.prompt_lens.split(",")]
     else:
         lens = [args.prompt_len] * args.batch
+    if args.packed and args.smoke:
+        # CI smoke contract: packed decode == unpacked int8 decode, token
+        # for token (stacks with --pruned: both arms slice first). The
+        # packed arm *is* the serving run, so nothing decodes twice.
+        packed_parity_check(args.arch, args.smoke, lens, args.gen,
+                            pruned=args.pruned, sparsity=args.sparsity,
+                            bits_init=args.bits, max_slots=args.slots)
+        return
     if args.pruned and args.smoke:
         # CI smoke contract: pruned decode == masked dense reference,
         # token for token. The check's pruned arm *is* the serving run
@@ -219,7 +285,8 @@ def main():
         return
     engine_serve(args.arch, args.smoke, lens, args.gen,
                  quantized=args.quantized, compressed=args.compressed,
-                 pruned=args.pruned, sparsity=args.sparsity,
+                 packed=args.packed, pruned=args.pruned,
+                 sparsity=args.sparsity, bits_init=args.bits,
                  max_slots=args.slots)
 
 

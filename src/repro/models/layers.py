@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.quant import QuantParams, fake_quant
+from repro.core.quant import PACKED_STORAGE_BITS, QuantParams, fake_quant
 from repro.kernels import ops as Kops
 
 Dtype = Any
@@ -36,6 +36,14 @@ _KERNEL_DISPATCH = {"enabled": True}
 # can consume `<name>.codes` / fuse their `.wq` quantizer into the GEMM).
 # Single source of truth for transformer._prequantize and core.subnet.
 ROUTED_COMPONENTS = ("attn", "mlp", "mamba", "rwkv", "shared")
+
+# Sub-byte packed weights ride the param dict as `<name>.packed{bits}`
+# (int32 word stream, K-packed) + `<name>.scale`: the storage width lives
+# in the *key*, so it stays a static value through jit while the words
+# scan-stack over the layer axis exactly like the dense tensor did.
+# Derived from the producer's width set (`compress_lm` emits exactly these
+# suffixes via `packed_storage_bits`) so the two can't drift.
+PACKED_PARAM_BITS = tuple(sorted(PACKED_STORAGE_BITS, reverse=True))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +135,9 @@ def dense_proj(x: jax.Array, lp: dict, qp: Optional[dict], name: str, *,
       masked_matmul_op (mask fused into the RHS tile load)
     - int codes (`<name>.codes` / `<name>.scale` from a compressed Subnet)
       -> quant_matmul_op (dequant inside VMEM; the serving path)
+    - packed sub-byte codes (`<name>.packed{bits}` + `<name>.scale`)
+      -> packed_quant_matmul_op (unpack-dequant inside VMEM; int32 words
+      at 32//bits codes each stream from HBM — the `--packed` path)
 
     A column mask may also ride the param dict as `<name>.colmask` so it
     stacks over the layer axis and scans with the block body.
@@ -136,6 +147,17 @@ def dense_proj(x: jax.Array, lp: dict, qp: Optional[dict], name: str, *,
         mask = lp.get(name + ".colmask")
     site = name + ".wq"
     qpw: Optional[QuantParams] = qp.get(site) if qp is not None else None
+
+    for pbits in PACKED_PARAM_BITS:
+        packed = lp.get(f"{name}.packed{pbits}")
+        if packed is not None:
+            scale = jnp.asarray(lp[name + ".scale"], jnp.float32)
+            if scale.ndim == 0:
+                scale = jnp.broadcast_to(scale, (packed.shape[-1],))
+            x2 = x.reshape(-1, x.shape[-1])
+            y = Kops.packed_quant_matmul_op(x2, packed, pbits, scale,
+                                            backend=backend)
+            return y.reshape(*x.shape[:-1], packed.shape[-1])
 
     if codes is not None:
         scale = jnp.asarray(lp[name + ".scale"], jnp.float32)

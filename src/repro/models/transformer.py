@@ -19,6 +19,9 @@ entry point consumes compressed Subnet weights: a param dict may replace a
 2-D weight `<name>` with `<name>.codes` (int8/int16 codes, scan-stacked
 like the dense tensor) + `<name>.scale`, and the block body then decodes
 through the quant-dequant GEMM epilogue — the `--compressed` serving path.
+Sub-byte sites ride as `<name>.packed{bits}` int32 word streams instead
+(the storage width stays static in the key) and decode through the
+unpack-dequant epilogue — the `--packed` path (DESIGN.md §4.8).
 """
 from __future__ import annotations
 

@@ -42,6 +42,16 @@ def _w_and_ops(key, kind, k, n):
         codes = jax.random.randint(k1, (k, n), -hi, hi).astype(dt)
         scale = (jax.random.uniform(k2, (n,)) + 0.5) * (2.0 / hi)
         return codes, (gemm_core.dequant(scale),)
+    if kind.startswith("unpack_dequant"):
+        # sub-byte packed codes: int32 word stream along K (bits=3 covers
+        # the 10-codes-per-word stream whose block is the non-default 120)
+        from repro.core.quant import pack_codes
+        bits = int(kind[-1])
+        hi = 2 ** (bits - 1) - 1
+        codes = jax.random.randint(k1, (k, n), -hi, hi + 1).astype(jnp.int8)
+        scale = (jax.random.uniform(k2, (n,)) + 0.5) * (2.0 / hi)
+        return (pack_codes(codes, bits, axis=0),
+                (gemm_core.unpack_dequant(bits, scale),))
     if kind == "fake_quant":
         return (jax.random.normal(k1, (k, n)) * 1.5,
                 (gemm_core.fake_quant_rhs(d, qm, t),))
@@ -51,7 +61,7 @@ def _w_and_ops(key, kind, k, n):
 
 
 EPILOGUES = ["col_mask", "dequant_int8", "dequant_int16", "fake_quant",
-             "fused_joint"]
+             "fused_joint", "unpack_dequant_b4", "unpack_dequant_b3"]
 
 
 @pytest.mark.parametrize("mkn", RAGGED_SHAPES,

@@ -110,3 +110,21 @@ def test_init_matches_requested_bits(bits):
     qp = Q.init_quant_params(w, bits=bits)
     b = float(Q.bit_width(qp.d, qp.q_m, qp.t))
     assert abs(b - bits) < 1e-3
+
+
+@given(bits=st.integers(2, 8), data=st.data())
+@settings(max_examples=120, deadline=None)
+def test_pack_unpack_roundtrip_property(bits, data):
+    """unpack(pack(c, b), b) == c exactly for every width 2-8 — negative
+    codes, the full ±(2^(b-1)-1) range, and non-word-aligned lengths
+    (trailing partial words) included."""
+    hi = 2 ** (bits - 1) - 1
+    codes = data.draw(st.lists(st.integers(-hi, hi), min_size=1,
+                               max_size=67))
+    c = jnp.asarray(codes, jnp.int32)
+    packed = Q.pack_codes(c, bits)
+    assert packed.dtype == jnp.int32
+    cpw = 32 // bits
+    assert packed.shape[0] == -(-len(codes) // cpw)
+    u = np.asarray(Q.unpack_codes(packed, bits, len(codes)))
+    np.testing.assert_array_equal(u, np.asarray(codes, np.int32))
