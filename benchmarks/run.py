@@ -367,6 +367,113 @@ def bench_engine_decode_packed(fast=False):
     return out
 
 
+def bench_engine_decode_attn(fast=False):
+    """Fused flash-decode attention on the engine decode path: kernel arm
+    vs the legacy full-length einsum arm, across dense / pruned(s50) /
+    packed(b4) engines, same weights/prompts/seed per config (the arms
+    must be token-identical — asserted here, same contract as the
+    `--decode-attn-parity` CI smoke). The derived field carries both
+    arms' tok/s plus the analytic decode-attention roofline
+    (`roofline.analysis.decode_attn_row`): attained-vs-roof HBM bandwidth
+    of the arena traffic at the measured step time. Persists everything
+    to BENCH_decode.json at the repo root — the tracked decode perf
+    trajectory."""
+    import json
+    import os
+
+    from repro.launch.engine import build_engine, synthetic_prompts
+    from repro.models.layers import use_decode_attn
+    from repro.roofline.analysis import HBM_BW, decode_attn_row
+
+    slots = 4
+    gen = 12 if fast else 24
+    lens = [6, 6, 6, 6]
+    configs = [
+        ("dense", {}),
+        ("pruned_s50", dict(compressed=True, pruned=True, sparsity=0.5)),
+        ("packed_b4", dict(packed=True, bits_init=4.0)),
+    ]
+    results = {}
+    for tag, kw in configs:
+        arms = {}
+        tokens = {}
+        # several drain cycles per arm, best cycle kept: one cycle is ~a
+        # dozen decode steps, far too short for stable wall timing on a
+        # shared host, so the minimum-us/token cycle (least scheduler
+        # interference) is the recorded figure for both arms alike
+        reps = 3 if fast else 10
+        for arm, enabled in (("einsum", False), ("kernel", True)):
+            with use_decode_attn(enabled):
+                eng, lm = build_engine("internlm2-1.8b", True,
+                                       max_slots=slots,
+                                       max_seq=max(lens) + gen, **kw)
+                eng.warmup()
+                best = None
+                for r in range(reps):
+                    s0 = dict(eng.stats)
+                    for p in synthetic_prompts(lm.cfg, lens):
+                        eng.submit(p, gen)
+                    tokens[arm] = eng.run()
+                    dsec = eng.stats["decode_s"] - s0["decode_s"]
+                    dtok = eng.stats["decode_tokens"] - s0["decode_tokens"]
+                    dstep = eng.stats["decode_steps"] - s0["decode_steps"]
+                    cyc = {
+                        "us_per_tok": dsec * 1e6 / max(dtok, 1),
+                        "tok_per_s": dtok / max(dsec, 1e-9),
+                        "step_s": dsec / max(dstep, 1),
+                    }
+                    if best is None or cyc["us_per_tok"] < best["us_per_tok"]:
+                        best = cyc
+            arms[arm] = best
+        for rid in tokens["einsum"]:
+            np.testing.assert_array_equal(
+                tokens["kernel"][rid], tokens["einsum"][rid],
+                err_msg=f"decode-attn arms diverged ({tag}, request {rid})")
+        # analytic roofline at this engine's *served* attention shapes
+        # (pruned subnets decode fewer kv heads — lm.shapes carries them)
+        att = [sh for sh in lm.shapes if sh.n_heads > 0]
+        cache_bytes = jnp.dtype(eng._cache_dtype).itemsize
+        ctx = max(lens) + gen / 2.0    # mean valid cache length over decode
+        roof = decode_attn_row(
+            batch=slots, ctx=ctx,
+            n_heads=int(np.mean([sh.n_heads for sh in att])),
+            n_kv_heads=int(np.mean([sh.n_kv_heads for sh in att])),
+            d_head=int(np.mean([sh.d_head for sh in att])),
+            n_layers=len(att), cache_bytes=cache_bytes)
+        step_s = arms["kernel"]["step_s"]
+        roofline = {
+            "bytes_per_step": roof.bytes_hbm,
+            "flops_per_step": roof.flops,
+            "roof_step_s": roof.roof_s,
+            "attained_gbps": roof.attained_gbps(step_s),
+            "frac_of_roof": roof.frac_of_roof(step_s),
+            "hbm_roof_gbps": HBM_BW / 1e9,
+        }
+        speedup = (arms["einsum"]["us_per_tok"]
+                   / max(arms["kernel"]["us_per_tok"], 1e-9))
+        _row(f"engine_decode_attn_{tag}", arms["kernel"]["us_per_tok"],
+             f"tok_per_s={arms['kernel']['tok_per_s']:.1f};"
+             f"einsum_tok_per_s={arms['einsum']['tok_per_s']:.1f};"
+             f"speedup={speedup:.2f}x;"
+             f"attained_gbps={roofline['attained_gbps']:.2f};"
+             f"frac_of_roof={roofline['frac_of_roof']:.4f}")
+        results[tag] = {"kernel": arms["kernel"], "einsum": arms["einsum"],
+                        "speedup": speedup, "roofline": roofline,
+                        "token_identical": True}
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
+    payload = {
+        "bench": "engine_decode_attn",
+        "arch": "internlm2-1.8b(smoke)",
+        "workload": {"slots": slots, "prompt_lens": lens, "gen": gen},
+        "host_backend": jax.default_backend(),
+        "rows": results,
+    }
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return results
+
+
 def bench_sharded_train_scaling(fast=False):
     """1 -> N-device GETA train-step scaling (data-parallel, deterministic
     ordered reduction — DESIGN.md §5).
@@ -433,7 +540,7 @@ ALL = [bench_table2_resnet20, bench_table3_bert, bench_table4_vgg7,
        bench_kernel_fake_quant, bench_kernel_fused_joint, bench_serve_decode,
        bench_engine_prefill, bench_engine_continuous,
        bench_engine_decode_pruned, bench_engine_decode_packed,
-       bench_sharded_train_scaling]
+       bench_engine_decode_attn, bench_sharded_train_scaling]
 
 
 def main() -> None:

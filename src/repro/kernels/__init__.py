@@ -10,13 +10,13 @@ from repro.kernels.dispatch import (available_backends, resolve, set_backend,
                                     use_backend)
 from repro.kernels.gemm_core import (RhsOp, col_mask, dequant, fake_quant_rhs,
                                      gemm)
-from repro.kernels.ops import (fake_quant_op, fq_masked_matmul_op,
-                               fq_matmul_op, masked_matmul_op, matmul_op,
-                               quant_matmul_op)
+from repro.kernels.ops import (decode_attn_op, fake_quant_op,
+                               fq_masked_matmul_op, fq_matmul_op,
+                               masked_matmul_op, matmul_op, quant_matmul_op)
 
 __all__ = [
     "available_backends", "resolve", "set_backend", "use_backend",
     "RhsOp", "col_mask", "dequant", "fake_quant_rhs", "gemm",
-    "fake_quant_op", "fq_masked_matmul_op", "fq_matmul_op",
-    "masked_matmul_op", "matmul_op", "quant_matmul_op",
+    "decode_attn_op", "fake_quant_op", "fq_masked_matmul_op",
+    "fq_matmul_op", "masked_matmul_op", "matmul_op", "quant_matmul_op",
 ]

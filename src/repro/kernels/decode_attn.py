@@ -1,0 +1,160 @@
+"""Fused flash-decode attention over the slot KV arena (single query).
+
+Decode-time attention is the one hot op the kernel backend didn't own:
+`attn_apply`'s decode branch materializes a full-length f32 score tensor
+(B, KVh, g, 1, S_max) over the *whole* arena row, masks the unwritten
+slots with `jnp.where`, and softmaxes — three HBM round-trips of an array
+that grows with max_seq. This kernel streams each cache row once:
+
+  grid = (batch-slot b, KV head h, split-K chunk c)   — c innermost
+
+Chunk programs for one (b, h) run consecutively (the same accumulator
+pattern `gemm_core` uses for its K axis), carrying the online-softmax
+state across chunks in VMEM scratch:
+
+  m  (g, LANES) f32   running row max of the scores
+  l  (g, LANES) f32   running softmax denominator
+  o  = the f32 output block itself, holding the *unnormalized*
+       rescaled accumulator until the last chunk divides by l.
+
+Per chunk: s = q @ k_chunk^T / sqrt(dh), masked to the slot's valid
+length; m_new = max(m, max(s)); both l and o are rescaled by
+exp(m - m_new) before accumulating exp(s - m_new) — the standard
+flash-attention cross-chunk combine, so any chunking of the cache length
+produces the same softmax (the chunk-count invariance test pins this).
+
+GQA: all g = H // KVh query groups of one KV head are computed by a
+single program as the (g, dh) LHS of both GEMMs, so the kv tile is read
+once per head, not once per query head.
+
+Valid-length / ring-window masking lives *inside* the kernel: a slot at
+position `pos` has written exactly n_valid = min(pos + 1, S) arena rows —
+rows [0, pos] of a full arena, or the whole ring once `pos` wraps a
+windowed (ring_len = S) arena. Attention is permutation-invariant over
+KV rows, so the ring's scrambled storage order needs no unscrambling;
+columns >= n_valid are masked to -1e30 and chunks that start at or past
+n_valid are skipped entirely (`@pl.when`), so scores for unwritten rows
+are never computed.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Cache-length rows processed per grid step. 128 keeps the (g, chunk)
+# probability tile lane-aligned on the MXU; the wrapper shrinks it for
+# short arenas (interpret mode may go as low as 8).
+DEFAULT_CHUNK = 128
+
+_NEG_INF = -1e30
+_LANES = 128     # scratch minor dim: m/l are logically (g, 1), stored
+                 # lane-replicated so the VMEM tile stays MXU-shaped
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            chunk: int, nchunks: int, scale: float):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    n_valid = nv_ref[0, 0]
+
+    @pl.when(c * chunk < n_valid)
+    def _chunk():
+        q = q_ref[0, 0].astype(jnp.float32)              # (g, dh)
+        kt = k_ref[0, :, 0, :].astype(jnp.float32)       # (chunk, dh)
+        s = jax.lax.dot_general(
+            q, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (g, chunk)
+        col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + c * chunk
+        s = jnp.where(col < n_valid, s, _NEG_INF)
+        m_prev = m_ref[:, :1]                            # (g, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                           # (g, chunk)
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        vt = v_ref[0, :, 0, :].astype(jnp.float32)       # (chunk, dh)
+        pv = jax.lax.dot_general(
+            p, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (g, dh)
+        o_ref[0, 0] = o_ref[0, 0] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(c == nchunks - 1)
+    def _final():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[:, :1], 1e-30)
+
+
+def decode_attn_pallas(q, k, v, pos, *, window: int = 0,
+                       chunk: int | None = None,
+                       interpret: bool = False) -> jax.Array:
+    """Single-query attention of q over the (k, v) slot arena.
+
+    q:   (B, KVh, g, dh) — the token's query heads, grouped per KV head
+         (g = H // KVh; GQA ratio 1 for MHA).
+    k,v: (B, S, KVh, dh) — arena rows, post update of the current token.
+    pos: (B,) int32 per-slot absolute positions of the token being
+         decoded; row b has min(pos[b] + 1, S) valid arena rows (ring
+         arenas wrap, full arenas write row `pos` directly — same rule).
+    window: the layer's sliding window (static); kept for interface
+         symmetry with `attn_apply` — a windowed layer's arena *is* the
+         ring (S = ring_len), so the masking rule above already covers it.
+    chunk: split-K chunk length along S (default 128, shrunk to cover
+         short arenas). Returns (B, KVh, g, dh) f32.
+    """
+    del window   # the min(pos+1, S) rule covers ring and full arenas
+    B, KVh, g, dh = q.shape
+    assert k.shape == v.shape == (B, k.shape[1], KVh, dh), (
+        q.shape, k.shape, v.shape)
+    S = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+
+    # Compiled TPU tiles want 128-lane alignment; the interpreter (CPU
+    # parity tier) runs any shape, so it may tile at the 8-sublane floor.
+    align = 8 if interpret else 128
+    chunk = int(chunk or DEFAULT_CHUNK)
+    chunk = max(align, min(_round_up(chunk, align), _round_up(S, align)))
+    Sp = _round_up(S, chunk)
+    gp = _round_up(g, 8)
+    dhp = _round_up(dh, align)
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, gp - g), (0, dhp - dh)))
+    kp = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, dhp - dh)))
+    vp = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, dhp - dh)))
+    nv = jnp.minimum(jnp.asarray(pos, jnp.int32).reshape(B, 1) + 1, S)
+
+    nchunks = Sp // chunk
+    grid = (B, KVh, nchunks)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, nchunks=nchunks,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, c: (b, 0)),
+            pl.BlockSpec((1, 1, gp, dhp), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((1, chunk, 1, dhp), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, dhp), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gp, dhp), lambda b, h, c: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVh, gp, dhp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((gp, _LANES), jnp.float32),   # running max m
+            pltpu.VMEM((gp, _LANES), jnp.float32),   # running denom l
+        ],
+        interpret=interpret,
+    )(nv, qp, kp, vp)
+    return out[:, :, :g, :dh]

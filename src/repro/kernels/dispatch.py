@@ -1,4 +1,7 @@
-"""Kernel backend registry: one place that decides how GEMMs execute.
+"""Kernel backend registry: one place that decides how kernels execute.
+
+Covers every routed op in `kernels/ops.py` — the GEMM family and the
+flash-decode attention op (`decode_attn_op`).
 
 Backends:
   pallas-tpu        — compiled Pallas kernels (MXU path; requires a TPU).

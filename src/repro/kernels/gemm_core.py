@@ -151,8 +151,16 @@ def _make_kernel(ops: tuple[RhsOp, ...]):
 
 
 def _clamp_blocks(blocks, M, N, K):
+    """Shrink the (bm, bn, bk) tile to cover small inputs without waste.
+
+    bm clamps to the *8-sublane-aligned* cover of M: decode GEMMs run at
+    M = active slots (often 4-8), and an M=4 input under the default
+    bm=128 would pad 97% of the tile; rounding M up to a multiple of 8
+    keeps the tile MXU-legal (f32 min sublane tile is 8) while the pad
+    stays < 8 rows. bn/bk floor at the 128-lane tile."""
     bm, bn, bk = blocks
-    return (min(bm, max(8, M)), min(bn, max(128, N)), min(bk, max(128, K)))
+    return (min(bm, -(-M // 8) * 8), min(bn, max(128, N)),
+            min(bk, max(128, K)))
 
 
 def gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,

@@ -26,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import decode_attn as _da
 from repro.kernels import dispatch
 from repro.kernels import fake_quant as _fq
 from repro.kernels import gemm_core as _gc
@@ -146,6 +147,27 @@ def packed_quant_matmul_op(x, packed, bits, scale, *, interpret=None,
                     backend=backend, out_dtype=x.dtype)
 
 
+# --------------------------------------------------- flash-decode attention
+def decode_attn_op(q, k, v, pos, *, window=0, chunk=None, interpret=None,
+                   backend=None):
+    """Single-query flash-decode attention over the slot KV arena.
+
+    q: (B, KVh, g, dh) query heads grouped per KV head (g = H // KVh);
+    k/v: (B, S, KVh, dh) arena rows with the current token written;
+    pos: (B,) int32 per-slot positions. Row b attends over its
+    min(pos[b] + 1, S) valid rows — full and ring (windowed) arenas
+    share the rule, enforced inside the kernel. Returns (B, KVh, g, dh)
+    f32 — inference-only (decode holds no gradients), like
+    `quant_matmul_op`. The split-K online-softmax kernel lives in
+    `kernels.decode_attn`; the xla-ref backend runs the legacy einsum
+    composition (`ref.decode_attn_ref`) bit-for-bit."""
+    backend = dispatch.resolve(backend, interpret)
+    if backend == "xla-ref":
+        return _ref.decode_attn_ref(q, k, v, pos, window=window)
+    return _da.decode_attn_pallas(q, k, v, pos, window=window, chunk=chunk,
+                                  interpret=(backend == "pallas-interpret"))
+
+
 # ------------------------------------------- fused fake-quant (+mask) matmul
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
 def _fq_matmul(x, w, d, q_m, t, backend):
@@ -222,6 +244,7 @@ def fq_masked_matmul_op(x, w, mask, d, q_m, t, *, interpret=None,
 
 
 # Re-export oracles for tests/benchmarks.
+decode_attn_ref = _ref.decode_attn_ref
 fake_quant_fwd_ref = _ref.fake_quant_fwd_ref
 fake_quant_bwd_ref = _ref.fake_quant_bwd_ref
 matmul_ref = _ref.matmul_ref

@@ -5,6 +5,8 @@ These are the source of truth the kernel tests assert against
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -71,6 +73,38 @@ def quant_matmul_ref(x, codes, scale):
     """y = x @ (codes * scale[None, :]) — int8 weights, per-column scales."""
     w = codes.astype(jnp.float32) * scale.astype(jnp.float32)[None, :]
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def decode_attn_ref(q, k, v, pos, *, window=0):
+    """Single-query attention over the slot KV arena — the oracle for
+    `kernels.decode_attn`.
+
+    q: (B, KVh, g, dh) query heads grouped per KV head; k/v: (B, S, KVh,
+    dh) arena rows (current token already written); pos: (B,) int32. Row
+    b attends over its min(pos[b] + 1, S) written arena rows — rows
+    [0, pos] of a full arena, or the whole ring once a windowed arena
+    wraps (attention is permutation-invariant over KV rows, so ring
+    storage order is irrelevant). `window` is accepted for interface
+    symmetry; the min(pos+1, S) rule already covers both arena kinds.
+
+    Deliberately the exact einsum/softmax composition of the legacy
+    `attn_apply` decode branch (same ops, same order), so the xla-ref
+    backend is bit-identical to the pre-kernel path and the engine's
+    kernel-on-vs-off token-identity smoke is exact, not approximate.
+    """
+    del window
+    B, KVh, g, dh = q.shape
+    S = k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    qh = q.reshape(B, 1, KVh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(dh)
+    valid = (jnp.arange(S)[None, :]
+             < jnp.minimum(pos + 1, S)[:, None])
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, KVh, g, dh)
 
 
 def packed_quant_matmul_ref(x, packed, bits, scale):

@@ -33,6 +33,7 @@ Smoke:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -46,6 +47,7 @@ from repro.configs import get_arch
 from repro.core.subnet import (compression_report, prepare_serving,
                                tree_bytes)
 from repro.data.synthetic import batch_for
+from repro.models import layers as model_layers
 from repro.models.transformer import LM
 
 
@@ -357,6 +359,7 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
         prune_sparsity=(sparsity if pruned and keep_masks is None else None))
     eng = Engine(lm, params, qparams, max_slots=max_slots, max_seq=max_seq)
     meta["kv_bytes"] = eng.kv_bytes()
+    meta["decode_attn"] = model_layers.decode_attn_enabled()
     eng.serving_meta = meta
     if verbose and (compressed or pruned):
         print(compression_report(arch, meta))
@@ -401,18 +404,26 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
                  packed: bool = False, pruned: bool = False,
                  sparsity: float = 0.5, bits_init: float = 8.0,
                  max_slots: int = 4, seed: int = 0, verbose: bool = True,
+                 decode_attn: bool | None = None,
                  stats: dict | None = None) -> dict[int, np.ndarray]:
-    """Submit one request per prompt length, run to drain, report tok/s."""
+    """Submit one request per prompt length, run to drain, report tok/s.
+
+    `decode_attn` pins the fused flash-decode attention kernel on (True)
+    or off (False) for this serve — build, warmup and drain all run under
+    the override; None leaves the process default (on) untouched."""
     max_seq = max(prompt_lens) + gen
-    eng, lm = build_engine(arch, smoke, quantized=quantized,
-                           compressed=compressed, packed=packed,
-                           pruned=pruned, sparsity=sparsity,
-                           bits_init=bits_init, max_slots=max_slots,
-                           max_seq=max_seq, seed=seed, verbose=verbose)
-    for p in synthetic_prompts(lm.cfg, prompt_lens, seed):
-        eng.submit(p, gen)
-    eng.warmup()
-    out = eng.run()
+    ctx = (model_layers.use_decode_attn(decode_attn)
+           if decode_attn is not None else contextlib.nullcontext())
+    with ctx:
+        eng, lm = build_engine(arch, smoke, quantized=quantized,
+                               compressed=compressed, packed=packed,
+                               pruned=pruned, sparsity=sparsity,
+                               bits_init=bits_init, max_slots=max_slots,
+                               max_seq=max_seq, seed=seed, verbose=verbose)
+        for p in synthetic_prompts(lm.cfg, prompt_lens, seed):
+            eng.submit(p, gen)
+        eng.warmup()
+        out = eng.run()
     if stats is not None:
         stats.update(eng.stats, **eng.throughput(),
                      param_bytes=eng.param_bytes(), kv_bytes=eng.kv_bytes())

@@ -200,6 +200,51 @@ def packed_parity_check(arch: str, smoke: bool, prompt_lens: list[int],
     return got
 
 
+def decode_attn_parity_check(arch: str, smoke: bool, prompt_lens: list[int],
+                             gen: int, *, compressed: bool = False,
+                             packed: bool = False, pruned: bool = False,
+                             sparsity: float = 0.5, bits_init: float = 8.0,
+                             max_slots: int, seed: int = 0,
+                             verbose: bool = True) -> dict:
+    """Assert engine decode with the fused flash-decode attention kernel
+    is token-identical to the legacy full-length einsum path, on the same
+    weights/prompts/seed. Both arms share every GEMM; only the decode
+    attention composition differs, and the kernel's xla-ref backend runs
+    the einsum math bit-for-bit (ref.decode_attn_ref) while the Pallas
+    backends agree to the parity tier's 1e-4 — so greedy tokens must
+    match exactly on any host. Stacks with --pruned / --packed (the
+    kernel is parameterized by LayerShapes, so sliced head counts flow
+    through). Raises AssertionError on divergence — the CI smoke for
+    `serve --smoke --decode-attn-parity`. Returns the kernel arm's
+    output (the run that printed the throughput report)."""
+    import numpy as np
+
+    from repro.launch.engine import engine_serve
+    want = engine_serve(arch, smoke, prompt_lens, gen,
+                        compressed=compressed, packed=packed, pruned=pruned,
+                        sparsity=sparsity, bits_init=bits_init,
+                        max_slots=max_slots, seed=seed, verbose=False,
+                        decode_attn=False)
+    got = engine_serve(arch, smoke, prompt_lens, gen,
+                       compressed=compressed, packed=packed, pruned=pruned,
+                       sparsity=sparsity, bits_init=bits_init,
+                       max_slots=max_slots, seed=seed, verbose=verbose,
+                       decode_attn=True)
+    assert sorted(got) == sorted(want), (sorted(got), sorted(want))
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"flash-decode attention diverged from the einsum "
+                    f"reference path (request {rid})")
+    mode = ("packed" if packed else
+            "compressed" if compressed else "dense")
+    if pruned:
+        mode += f"+pruned@{sparsity:.2f}"
+    print(f"{arch}: flash-decode attention token-identical to the einsum "
+          f"reference over {len(want)} requests ({mode})")
+    return got
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -245,7 +290,21 @@ def main():
     ap.add_argument("--sparsity", type=float, default=0.5,
                     help="pruned mode: target fraction of prunable units "
                          "removed (default 0.5)")
+    ap.add_argument("--no-decode-attn", dest="decode_attn",
+                    action="store_false", default=True,
+                    help="disable the fused flash-decode attention kernel "
+                         "and decode through the legacy full-length "
+                         "einsum+softmax path (DESIGN.md §4.9)")
+    ap.add_argument("--decode-attn-parity", action="store_true",
+                    default=False,
+                    help="engine mode: serve twice — flash-decode kernel "
+                         "forced on and forced off — and assert the greedy "
+                         "tokens are identical (the decode-attn CI smoke; "
+                         "honors --compressed/--packed/--pruned)")
     args = ap.parse_args()
+    if not args.decode_attn:
+        from repro.models.layers import set_decode_attn
+        set_decode_attn(False)
     cfg = get_arch(args.arch, smoke=args.smoke)
     if not args.static and (cfg.num_codebooks or cfg.vision_patches):
         # the engine serves plain token LMs; these archs keep working
@@ -265,6 +324,17 @@ def main():
         lens = [int(x) for x in args.prompt_lens.split(",")]
     else:
         lens = [args.prompt_len] * args.batch
+    if args.decode_attn_parity:
+        # CI smoke contract: flash-decode kernel == einsum reference,
+        # token for token. The kernel arm *is* the serving run (it prints
+        # the throughput report), so nothing decodes a third time.
+        decode_attn_parity_check(args.arch, args.smoke, lens, args.gen,
+                                 compressed=args.compressed,
+                                 packed=args.packed, pruned=args.pruned,
+                                 sparsity=args.sparsity,
+                                 bits_init=args.bits,
+                                 max_slots=args.slots)
+        return
     if args.packed and args.smoke:
         # CI smoke contract: packed decode == unpacked int8 decode, token
         # for token (stacks with --pruned: both arms slice first). The

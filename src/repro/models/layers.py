@@ -12,8 +12,10 @@ Conventions:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
+import os
 from functools import partial
 from typing import Any, Optional
 
@@ -90,6 +92,34 @@ def set_kernel_dispatch(enabled: bool) -> None:
 
 def kernel_dispatch_enabled() -> bool:
     return _KERNEL_DISPATCH["enabled"]
+
+
+# Fused flash-decode attention (kernels/decode_attn.py) on the single-query
+# decode branch. Default on; `set_decode_attn(False)` (or
+# REPRO_DECODE_ATTN=0) restores the full-length einsum+softmax composition.
+# The op dispatches like every other kernel (pallas-tpu on TPU, the
+# bit-identical xla-ref oracle elsewhere), so flipping the flag on a CPU
+# host changes which *code path* runs, not the tokens. See DESIGN.md §4.9.
+_DECODE_ATTN = {"enabled": os.environ.get("REPRO_DECODE_ATTN", "1") != "0"}
+
+
+def set_decode_attn(enabled: bool) -> None:
+    _DECODE_ATTN["enabled"] = bool(enabled)
+
+
+def decode_attn_enabled() -> bool:
+    return _DECODE_ATTN["enabled"]
+
+
+@contextlib.contextmanager
+def use_decode_attn(enabled: bool):
+    """Scoped flag flip (tests / parity smokes / benchmarks)."""
+    prev = _DECODE_ATTN["enabled"]
+    _DECODE_ATTN["enabled"] = bool(enabled)
+    try:
+        yield
+    finally:
+        _DECODE_ATTN["enabled"] = prev
 
 # Optional NamedSharding for decode attention scores (B, KV, g, 1, S).
 # When the KV cache is d_head-sharded (GQA kv-heads don't divide the model
@@ -417,19 +447,33 @@ def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
         k_all, v_all = ck, cv
         # attention of the single query over the cache
         g = H // KVh
-        qh = q.reshape(B, 1, KVh, g, dh)
-        scores = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32),
-                            k_all.astype(jnp.float32)) / math.sqrt(dh)
-        if DECODE_SCORE_SHARDING is not None:
-            scores = jax.lax.with_sharding_constraint(
-                scores, DECODE_SCORE_SHARDING)
-        if window <= 0:
-            valid = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]
+        if (_DECODE_ATTN["enabled"] and _KERNEL_DISPATCH["enabled"]
+                and DECODE_SCORE_SHARDING is None):
+            # fused flash-decode kernel: split-K online softmax over the
+            # arena, valid-length/ring masking inside the kernel
+            out = Kops.decode_attn_op(q.reshape(B, KVh, g, dh),
+                                      k_all, v_all, pos, window=window)
+            out = out.reshape(B, 1, H, dh).astype(x.dtype)
+        else:
+            qh = q.reshape(B, 1, KVh, g, dh)
+            scores = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32),
+                                k_all.astype(jnp.float32)) / math.sqrt(dh)
+            if DECODE_SCORE_SHARDING is not None:
+                scores = jax.lax.with_sharding_constraint(
+                    scores, DECODE_SCORE_SHARDING)
+            # mask unwritten arena rows: row b has written exactly
+            # min(pos[b]+1, S) slots — rows [0, pos] of a full arena, or
+            # the whole ring once a windowed arena wraps (softmax is
+            # permutation-invariant over KV rows, so ring order is moot).
+            # A fresh (pos < ring_len) windowed cache *must* mask its
+            # zero-initialized tail, same as the full arena.
+            valid = (jnp.arange(ck.shape[1])[None, :]
+                     < jnp.minimum(pos + 1, ck.shape[1])[:, None])
             scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
-        probs = jax.nn.softmax(scores, axis=-1)
-        out = jnp.einsum("bkgqs,bskd->bqkgd", probs,
-                         v_all.astype(jnp.float32))
-        out = out.reshape(B, 1, H, dh).astype(x.dtype)
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bkgqs,bskd->bqkgd", probs,
+                             v_all.astype(jnp.float32))
+            out = out.reshape(B, 1, H, dh).astype(x.dtype)
         new_cache = (ck, cv, pos + 1)
     else:
         out = attention(q, k, v, cfg, window=window, q_offset=q_offset)

@@ -262,6 +262,56 @@ def make_row(arch: str, shape_cfg, mesh_name: str, step: str,
         coll_counts=cost.coll_counts)
 
 
+@dataclasses.dataclass
+class DecodeAttnRow:
+    """Analytic roofline for one fused flash-decode attention step.
+
+    Decode attention is HBM-bound at any realistic arena length: the
+    kernel streams the whole K and V arena once (the dominant term, grows
+    with context) plus the current token's cache write and q/out
+    activations, against 2 MACs per streamed element (QK^T + PV) — an
+    arithmetic intensity of ~2 flops/byte at bf16 caches, far under the
+    v5e ridge (~240). The interesting number is therefore attained HBM
+    bandwidth vs the 819 GB/s roof, not FLOP utilization."""
+    batch: int
+    ctx: float                 # mean valid cache length over the decode
+    bytes_hbm: float           # KV read + cache write + q/out, per step
+    flops: float               # 2·S·dh·H MACs x 2 GEMMs, per step
+    roof_s: float              # best-case step time at the HBM roof
+
+    def attained_gbps(self, measured_s: float) -> float:
+        """Achieved HBM bandwidth if the measured step moved only this
+        row's bytes — a lower bound on the real attained bandwidth (the
+        step also runs its projection GEMMs)."""
+        return self.bytes_hbm / max(measured_s, 1e-12) / 1e9
+
+    def frac_of_roof(self, measured_s: float) -> float:
+        return self.roof_s / max(measured_s, 1e-12)
+
+
+def decode_attn_row(batch: int, ctx: float, n_heads: int, n_kv_heads: int,
+                    d_head: int, n_layers: int = 1, *,
+                    cache_bytes: int = 2, act_bytes: int = 4
+                    ) -> DecodeAttnRow:
+    """Decode-attention roofline row (per decode step, `n_layers` attention
+    sublayers).
+
+    bytes = KV arena read (K and V, `ctx` valid rows per slot) + the
+    token's cache write + q/out activations; flops = 2 GEMMs x
+    2·ctx·d_head·H MACs per sequence. `ctx` is the mean valid cache
+    length across the decode (ragged slots average out); pass the pruned
+    `LayerShapes` head counts for sliced subnets — the arena only holds
+    surviving kv heads."""
+    kv_read = 2.0 * batch * ctx * n_kv_heads * d_head * cache_bytes
+    cache_write = 2.0 * batch * n_kv_heads * d_head * cache_bytes
+    q_out = 2.0 * batch * n_heads * d_head * act_bytes
+    bytes_hbm = n_layers * (kv_read + cache_write + q_out)
+    flops = n_layers * 2.0 * 2.0 * batch * ctx * n_heads * d_head
+    roof_s = max(bytes_hbm / HBM_BW, flops / PEAK_FLOPS)
+    return DecodeAttnRow(batch=batch, ctx=ctx, bytes_hbm=bytes_hbm,
+                         flops=flops, roof_s=roof_s)
+
+
 def model_flops_for(cfg, shape) -> float:
     """6*N*D (dense) / 6*N_active*D (MoE) + attention term — global."""
     toks = float(shape.global_batch) * shape.seq_len

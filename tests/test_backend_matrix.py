@@ -20,9 +20,12 @@ import pytest
 
 from repro.kernels import gemm_core
 
-# deliberately ragged: primes, 1-row/1-col edges, > one block in each dim
+# deliberately ragged: primes, 1-row/1-col edges, > one block in each dim,
+# decode-shaped small-M rows (M = active slots; exercises the aligned
+# small-M bm clamp in gemm_core._clamp_blocks)
 RAGGED_SHAPES = [(1, 1, 1), (1, 7, 5), (3, 193, 17), (29, 31, 37),
-                 (57, 384, 129), (130, 257, 131)]
+                 (57, 384, 129), (130, 257, 131),
+                 (4, 256, 128), (8, 96, 160)]
 
 ATOL = 1e-4
 
