@@ -9,10 +9,25 @@ learned sub-byte storage widths (unpack-dequant epilogue, DESIGN.md
 §4.8); `--pruned` physically slices the model to magnitude masks first
 (surviving heads / MLP hidden / experts only — the GEMMs and the KV
 arena shrink with realized sparsity). Stacked, they are the full
-deployment path: sub-byte codes at pruned shapes.
+deployment path: sub-byte codes at pruned shapes. `--speculative`
+attaches the self-speculative draft — the same checkpoint sliced to
+`--draft-sparsity` and packed at `--draft-bits` proposes up to
+`--draft-k` tokens per round, the target verifies them in one chunked
+pass, and the output stream stays token-identical to the plain engine
+(DESIGN.md §4.10); the report line adds the acceptance rate.
 
     PYTHONPATH=src python examples/serve_engine.py --packed --pruned \
         --bits 4 --prompt-lens 16,4,9,12 --gens 24,8,16,12 --slots 2
+
+    PYTHONPATH=src python examples/serve_engine.py --speculative \
+        --draft-k 4 --draft-sparsity 0 --draft-bits 8 \
+        --prompt-lens 16,4,9,12 --gens 24,8,16,12 --slots 2
+
+(On these random-init smoke weights only a keep-all draft tracks the
+target — `--draft-sparsity 0` shows acceptance ~1.0. A GETA cooldown
+checkpoint, whose pruned groups are already zero, gets the same
+acceptance from its s50 slice: `launch.speculative.
+build_checkpoint_engines` and `BENCH_speculative.json` cover that pair.)
 """
 import argparse
 
@@ -45,6 +60,18 @@ def main():
                          "--sparsity and serve the pruned shapes (smaller "
                          "GEMMs, shrunk KV arena); stacks with --compressed")
     ap.add_argument("--sparsity", type=float, default=0.5)
+    ap.add_argument("--speculative", action="store_true", default=False,
+                    help="draft/verify decoding: a sliced+packed subnet of "
+                         "the same checkpoint drafts tokens, the target "
+                         "verifies them in one chunked pass — "
+                         "token-identical output, fewer target dispatches")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="max proposals per speculative round")
+    ap.add_argument("--draft-sparsity", type=float, default=0.5,
+                    help="draft subnet sparsity (0 keeps all units)")
+    ap.add_argument("--draft-bits", type=float, default=8.0,
+                    help="draft quantizer width (8 tracks the target "
+                         "closely; 2 is cheap but rarely accepted)")
     args = ap.parse_args()
 
     lens = [int(x) for x in args.prompt_lens.split(",")]
@@ -58,7 +85,10 @@ def main():
                            bits_init=args.bits, pruned=args.pruned,
                            sparsity=args.sparsity, max_slots=args.slots,
                            max_seq=max(p + g for p, g in zip(lens, gens)),
-                           verbose=True)
+                           verbose=True, speculative=args.speculative,
+                           draft_k=args.draft_k,
+                           draft_sparsity=args.draft_sparsity,
+                           draft_bits=args.draft_bits)
     rids = [eng.submit(p, g) for p, g in
             zip(synthetic_prompts(lm.cfg, lens), gens)]
     eng.warmup()
@@ -70,11 +100,17 @@ def main():
               f"generated: {toks}{more}")
     th = eng.throughput()
     s = eng.stats
-    print(f"decode: {s['decode_tokens']} tokens in {s['decode_s']:.2f}s "
-          f"({th['decode_tok_per_s']:.1f} tok/s, occupancy "
-          f"{th['slot_occupancy']:.2f} over {args.slots} slots); "
-          f"one-shot prefill: {s['prefill_tokens']} tokens "
-          f"({th['prefill_tok_per_s']:.1f} tok/s)")
+    line = (f"decode: {s['decode_tokens']} tokens in {s['decode_s']:.2f}s "
+            f"({th['decode_tok_per_s']:.1f} tok/s, occupancy "
+            f"{th['slot_occupancy']:.2f} over {args.slots} slots); "
+            f"one-shot prefill: {s['prefill_tokens']} tokens "
+            f"({th['prefill_tok_per_s']:.1f} tok/s)")
+    if args.speculative:
+        line += (f"; speculative: {s['spec_accepted']}/{s['spec_drafted']} "
+                 f"drafted tokens accepted "
+                 f"({th['acceptance_rate']:.2f}) over {s['spec_steps']} "
+                 f"rounds")
+    print(line)
 
 
 if __name__ == "__main__":

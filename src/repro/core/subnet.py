@@ -244,6 +244,24 @@ def resolve_keep_masks(lm, params: dict, sparsity: float):
     return qadg, masks
 
 
+def masked_reference_params(lm, params: dict, sparsity: float, *,
+                            quantized: bool = True):
+    """The dense model with its pruned groups *exactly zero* — the shape a
+    GETA checkpoint leaves the dense weights in after QASSO's cooldown
+    hard-zeroes discarded groups. Numerically identical to the
+    `prune_lm`-sliced subnet at the same masks and quantizer init (the
+    PR 4/5 parity contract), which is what makes it (a) the pruned path's
+    correctness oracle and (b) the speculative benchmark's target: a
+    subnet drafted from the same checkpoint agrees with it token for
+    token, so acceptance approaches 1. Resolves quantizers on the
+    *unmasked* params — the same order `prepare_serving` uses, so scales
+    match the sliced artifact's. Returns (masked params, qparams)."""
+    qparams = lm.init_qparams(params) if quantized else None
+    qadg, masks = resolve_keep_masks(lm, params, sparsity)
+    masked = qadg.space.apply_masks(params, masks)
+    return masked, qparams
+
+
 def prune_lm(lm, params: dict, *, keep_masks: Optional[dict] = None,
              sparsity: float = 0.5) -> tuple[dict, SlimPlan]:
     """Physically slice an LM to its pruned shapes, end to end.

@@ -75,7 +75,8 @@ class Engine:
     """
 
     def __init__(self, lm: LM, params: dict, qparams: Optional[dict], *,
-                 max_slots: int = 4, max_seq: int = 64):
+                 max_slots: int = 4, max_seq: int = 64,
+                 draft=None, draft_k: int = 4):
         cfg = lm.cfg
         if cfg.num_codebooks or cfg.vision_patches:
             raise ValueError("the engine serves plain token LMs; codebook "
@@ -99,8 +100,44 @@ class Engine:
         self._next_rid = 0
         self.stats = {"decode_steps": 0, "decode_tokens": 0, "decode_s": 0.0,
                       "prefills": 0, "prefill_tokens": 0, "prefill_s": 0.0,
-                      "admitted": 0, "evicted": 0}
+                      "admitted": 0, "evicted": 0,
+                      "spec_steps": 0, "spec_drafted": 0, "spec_accepted": 0}
         self.serving_meta: dict = {}   # prepare_serving meta (build_engine)
+
+        # speculative decoding: a DraftModel (launch/speculative.py) adds
+        # a second KV arena sharing this engine's slot/position tables
+        self.draft = draft
+        self.draft_k = int(draft_k)
+        self.dcaches = None
+        if draft is not None:
+            from repro.launch.speculative import make_spec_step
+            if cfg.window > 0:
+                raise ValueError(
+                    "speculative decoding needs full (window == 0) KV "
+                    "arenas: a ring wrap overwrites pre-wrap rows that a "
+                    "rejection could never roll back")
+            bad = sorted({s.mixer for s in lm.plan if s.mixer != "attn"})
+            if bad:
+                raise ValueError(
+                    f"speculative decoding needs attention mixers "
+                    f"everywhere (rollback zeroes KV rows); plan has "
+                    f"{bad} layers whose recurrent state cannot be "
+                    f"rolled back")
+            if not 1 <= self.draft_k < max_seq:
+                raise ValueError(
+                    f"draft_k={self.draft_k} must be in [1, "
+                    f"max_seq={max_seq})")
+            self.dcaches = draft.lm.init_cache(max_slots, max_seq, dtype=dt)
+            self._spec = jax.jit(make_spec_step(lm, draft.lm),
+                                 static_argnums=(8,))
+
+            def _prefill_draft(dparams, dqparams, tokens):
+                c = draft.lm.init_cache(1, max_seq, dtype=dt)
+                _, c = draft.lm.prefill(dparams, dqparams, c, tokens,
+                                        last_logit_only=True)
+                return c
+
+            self._prefill_draft = jax.jit(_prefill_draft)
 
         def _prefill(params, qparams, tokens):
             caches = lm.init_cache(1, max_seq, dtype=dt)
@@ -194,6 +231,20 @@ class Engine:
                     self._finish(req)
                     continue
                 self.caches = self._insert(self.caches, row, jnp.int32(slot))
+                if self.draft is not None:
+                    # the draft arena admits in lockstep: its own one-shot
+                    # prefill (at the draft's sliced shapes) into the same
+                    # slot, so both arenas agree on position bookkeeping
+                    # from the first speculative round
+                    t1 = time.time()
+                    drow = self._prefill_draft(self.draft.params,
+                                               self.draft.qparams,
+                                               jnp.asarray(req.prompt)[None])
+                    self.dcaches = self._insert(self.dcaches, drow,
+                                                jnp.int32(slot))
+                    jax.block_until_ready(
+                        jax.tree_util.tree_leaves(self.dcaches)[0])
+                    self.stats["prefill_s"] += time.time() - t1
                 self.pos[slot] = req.prompt.size
                 self.last_tok[slot] = first
                 req.slot = slot
@@ -211,10 +262,14 @@ class Engine:
 
     def step(self) -> bool:
         """One engine iteration: admit into free slots, then one batched
-        decode over every active slot. Returns False when idle."""
+        decode over every active slot — or, with a draft attached, one
+        speculative draft/verify round committing 1..k_eff+1 tokens per
+        slot. Returns False when idle."""
         self._admit()
         if self.n_active == 0:
             return False
+        if self.draft is not None:
+            return self._spec_round()
         tok = jnp.asarray(self.last_tok)[:, None]
         pos = jnp.asarray(self.pos)
         t0 = time.time()
@@ -234,6 +289,64 @@ class Engine:
                 self._finish(req)
         return True
 
+    def _spec_ks(self) -> list[int]:
+        """Draft-window lengths the speculative path can dispatch at:
+        {0} + powers of two <= draft_k — `_spec_round` quantizes to this
+        set, so it is exactly the compiled-shape set `warmup` covers."""
+        ks = [0]
+        k = 1
+        while k <= self.draft_k:
+            ks.append(k)
+            k *= 2
+        return ks
+
+    def _spec_round(self) -> bool:
+        """One speculative draft/verify/commit round over active slots.
+
+        k_eff = pow2_floor(min(draft_k, min remaining - 1)): the pow2
+        floor keeps the compiled spec-step set bounded (`_spec_ks`, the
+        warmup contract), and capping at min-remaining-1 guarantees every
+        slot's k_eff+1 writes stay inside its [0, prompt+budget) arena
+        prefix and its commits inside the token budget — the target's
+        free token rides on top of at most k_eff accepted proposals, so a
+        round commits at most `remaining` tokens and never truncates.
+        k_eff = 0 (a slot is one token from done) degenerates to a plain
+        one-token verify that still runs the draft scan once, keeping the
+        draft arena in sync through the same code path."""
+        from repro.launch.speculative import pow2_floor
+        rem = min(req.max_new_tokens - len(req.tokens)
+                  for req in self.active if req is not None)
+        k = pow2_floor(min(self.draft_k, rem - 1))
+        tok = jnp.asarray(self.last_tok)[:, None]
+        pos = jnp.asarray(self.pos)
+        t0 = time.time()
+        tgt, ncm, self.caches, self.dcaches = self._spec(
+            self.params, self.qparams, self.draft.params,
+            self.draft.qparams, self.caches, self.dcaches, tok, pos, k)
+        tgt = np.asarray(jax.block_until_ready(tgt))
+        ncm = np.asarray(ncm)
+        self.stats["decode_s"] += time.time() - t0
+        # one round advances k+1 positions' worth of scoring in one
+        # dispatch: decode_steps counts positions scored (slot_occupancy
+        # keeps its meaning), decode_tokens counts only *committed*
+        # tokens — drafted-but-rejected work shows up as the gap between
+        # spec_drafted and spec_accepted, never as throughput
+        self.stats["decode_steps"] += k + 1
+        self.stats["spec_steps"] += 1
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            n = int(ncm[slot])
+            self.stats["decode_tokens"] += n
+            self.stats["spec_drafted"] += k
+            self.stats["spec_accepted"] += n - 1
+            req.tokens.extend(int(t) for t in tgt[slot, :n])
+            self.last_tok[slot] = tgt[slot, n - 1]
+            self.pos[slot] += n
+            if req.done:
+                self._finish(req)
+        return True
+
     MAX_WINDOW = 32
 
     def warmup(self) -> None:
@@ -241,27 +354,53 @@ class Engine:
         caches untouched) so the first timed window measures decode, not
         XLA: every power-of-two window length (the `run()` path decodes
         exclusively through windows; the single-step `step()` path warms
-        lazily on first use) plus the queued prompt lengths' prefills."""
+        lazily on first use) plus the queued prompt lengths' prefills.
+        With a draft attached, the speculative step compiles instead —
+        one spec-step per k in `_spec_ks()` (the k_eff quantization
+        guarantees no other shape can be dispatched) plus the draft's own
+        prefills — so the compiled-shape set stays bounded either way."""
         tok = jnp.zeros((self.max_slots, 1), jnp.int32)
         pos = jnp.zeros((self.max_slots,), jnp.int32)
-        k = 1
-        while k <= self.MAX_WINDOW:
-            toks, _ = self._decode_window(self.params, self.qparams,
-                                          self.caches, tok, pos, k)
-            jax.block_until_ready(toks)
-            k *= 2
+        if self.draft is not None:
+            for k in self._spec_ks():
+                tgt, _, _, _ = self._spec(
+                    self.params, self.qparams, self.draft.params,
+                    self.draft.qparams, self.caches, self.dcaches,
+                    tok, pos, k)
+                jax.block_until_ready(tgt)
+        else:
+            k = 1
+            while k <= self.MAX_WINDOW:
+                toks, _ = self._decode_window(self.params, self.qparams,
+                                              self.caches, tok, pos, k)
+                jax.block_until_ready(toks)
+                k *= 2
         # prefill compiles per distinct prompt length; the queued lengths
         # are known, so warm them here instead of inside _admit's timing
         for n in sorted({req.prompt.size for req in self.queue}):
             nxt, _ = self._prefill(self.params, self.qparams,
                                    jnp.zeros((1, int(n)), jnp.int32))
             jax.block_until_ready(nxt)
+            if self.draft is not None:
+                drow = self._prefill_draft(self.draft.params,
+                                           self.draft.qparams,
+                                           jnp.zeros((1, int(n)), jnp.int32))
+                jax.block_until_ready(
+                    jax.tree_util.tree_leaves(drow)[0])
 
     def _window(self) -> bool:
         """Admit, then decode up to the next scheduled eviction in one
         fused dispatch. Token-identical to repeated `step()` — the window
         length is the minimum remaining budget over active slots, so no
         admission opportunity is skipped."""
+        if self.draft is not None:
+            # the fused window scans one committed token per step per
+            # slot; a speculative round commits 1..k_eff+1, so every
+            # count-based event schedule in here would misfire
+            raise RuntimeError(
+                "speculative engines decode through step(): _window's "
+                "event accounting assumes exactly one token per slot "
+                "per step")
         self._admit()
         if self.n_active == 0:
             return False
@@ -294,9 +433,12 @@ class Engine:
         included) for every request finished since the last drain, in rid
         order, and releases them — a long-lived engine stays bounded and
         a later drain never re-reports earlier batches. Decodes in
-        event-free windows (one dispatch + one host sync per window)."""
+        event-free windows (one dispatch + one host sync per window);
+        a speculative engine rounds through `step()` instead — each
+        round already fuses k_eff+1 positions into one dispatch."""
+        drive = self.step if self.draft is not None else self._window
         while self.pending:
-            if not self._window() and self.queue:
+            if not drive() and self.queue:
                 raise RuntimeError("queue stuck with no active slots")
         out = {rid: np.asarray(req.tokens, np.int32)
                for rid, req in sorted(self.done.items())}
@@ -305,13 +447,21 @@ class Engine:
 
     def throughput(self) -> dict[str, float]:
         s = self.stats
-        return {
+        out = {
             "decode_tok_per_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
             "prefill_tok_per_s": (s["prefill_tokens"]
                                   / max(s["prefill_s"], 1e-9)),
             "slot_occupancy": (s["decode_tokens"]
                                / max(s["decode_steps"] * self.max_slots, 1)),
         }
+        if self.draft is not None:
+            # decode_tokens only ever counts committed tokens, so the
+            # headline rate *is* accepted-tokens/s — the alias makes the
+            # benchmark metric explicit
+            out["accepted_tok_per_s"] = out["decode_tok_per_s"]
+            out["acceptance_rate"] = (s["spec_accepted"]
+                                      / max(s["spec_drafted"], 1))
+        return out
 
     def kv_bytes(self) -> int:
         """Bytes the slot arena pins in HBM. A pruned model's arena only
@@ -335,7 +485,9 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
                  pruned: bool = False, sparsity: float = 0.5,
                  keep_masks: dict | None = None, bits_init: float = 8.0,
                  max_slots: int = 4, max_seq: int = 64, seed: int = 0,
-                 verbose: bool = False) -> tuple[Engine, LM]:
+                 verbose: bool = False, speculative: bool = False,
+                 draft_k: int = 4, draft_sparsity: float = 0.5,
+                 draft_bits: float = 2.0) -> tuple[Engine, LM]:
     """Init an LM at `arch` scale and wrap it in an Engine.
 
     `pruned` serves the physically sliced subnet: `prepare_serving` builds
@@ -347,19 +499,44 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
     would be worse than either behavior). Composes with `compressed`
     (int codes on pruned shapes) and `packed` (sub-byte word streams —
     implies `compressed`; `bits_init` sets the quantizer init width, so
-    `bits_init=4` serves a genuinely 4-bit packed artifact)."""
+    `bits_init=4` serves a genuinely 4-bit packed artifact).
+
+    `speculative` attaches a self-speculative draft: the *same* init
+    params sliced to `draft_sparsity` and packed at `draft_bits`
+    (`launch/speculative.build_draft` — shared checkpoint, shared
+    quantizer-init order, so the draft is GETA-calibrated to the target),
+    decoding in draft/verify rounds of up to `draft_k` proposals. The
+    output stream stays token-identical to the non-speculative engine —
+    the `--speculative --smoke` parity check asserts it."""
     pruned = pruned or keep_masks is not None
     compressed = compressed or packed
     cfg = get_arch(arch, smoke=smoke)
     lm = LM(cfg)
     params, _ = lm.init(jax.random.PRNGKey(seed))
+    draft = None
+    if speculative:
+        from repro.launch.speculative import build_draft
+        # built from the same init params the target serves, *before*
+        # prepare_serving resolves the target pair (the draft runs its
+        # own prepare_serving on its own LM instance)
+        draft = build_draft(arch, smoke, params, sparsity=draft_sparsity,
+                            bits=draft_bits, seed=seed)
     params, qparams, meta = prepare_serving(
         lm, params, quantized=quantized, compressed=compressed,
         packed=packed, bits_init=bits_init, keep_masks=keep_masks,
         prune_sparsity=(sparsity if pruned and keep_masks is None else None))
-    eng = Engine(lm, params, qparams, max_slots=max_slots, max_seq=max_seq)
+    eng = Engine(lm, params, qparams, max_slots=max_slots, max_seq=max_seq,
+                 draft=draft, draft_k=draft_k)
     meta["kv_bytes"] = eng.kv_bytes()
     meta["decode_attn"] = model_layers.decode_attn_enabled()
+    if draft is not None:
+        meta["speculative"] = {
+            "draft_k": int(draft_k),
+            "draft_sparsity": float(draft.meta.get("sparsity", 0.0)),
+            "draft_bits": float(draft_bits),
+            "draft_param_bytes": tree_bytes(draft.params),
+            "draft_kv_bytes": tree_bytes(eng.dcaches),
+        }
     eng.serving_meta = meta
     if verbose and (compressed or pruned):
         print(compression_report(arch, meta))
@@ -376,13 +553,12 @@ def build_masked_reference_engine(arch: str, smoke: bool = True, *,
     sliced away. Shares seed, masks and quantizer init with
     `build_engine(pruned=True)`, so decode must be token-identical — the
     CI smoke and `tests/test_slim_serving.py` assert exactly that."""
-    from repro.core.subnet import resolve_keep_masks
+    from repro.core.subnet import masked_reference_params
     cfg = get_arch(arch, smoke=smoke)
     lm = LM(cfg)
     params, _ = lm.init(jax.random.PRNGKey(seed))
-    qparams = lm.init_qparams(params) if quantized else None
-    qadg, masks = resolve_keep_masks(lm, params, sparsity)
-    masked = qadg.space.apply_masks(params, masks)
+    masked, qparams = masked_reference_params(lm, params, sparsity,
+                                              quantized=quantized)
     return Engine(lm, masked, qparams, max_slots=max_slots,
                   max_seq=max_seq), lm
 
@@ -405,6 +581,8 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
                  sparsity: float = 0.5, bits_init: float = 8.0,
                  max_slots: int = 4, seed: int = 0, verbose: bool = True,
                  decode_attn: bool | None = None,
+                 speculative: bool = False, draft_k: int = 4,
+                 draft_sparsity: float = 0.5, draft_bits: float = 2.0,
                  stats: dict | None = None) -> dict[int, np.ndarray]:
     """Submit one request per prompt length, run to drain, report tok/s.
 
@@ -419,7 +597,10 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
                                compressed=compressed, packed=packed,
                                pruned=pruned, sparsity=sparsity,
                                bits_init=bits_init, max_slots=max_slots,
-                               max_seq=max_seq, seed=seed, verbose=verbose)
+                               max_seq=max_seq, seed=seed, verbose=verbose,
+                               speculative=speculative, draft_k=draft_k,
+                               draft_sparsity=draft_sparsity,
+                               draft_bits=draft_bits)
         for p in synthetic_prompts(lm.cfg, prompt_lens, seed):
             eng.submit(p, gen)
         eng.warmup()
@@ -434,12 +615,21 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
             mode += "+packed"
         if pruned:
             mode += f"+pruned@{eng.serving_meta.get('sparsity', 0.0):.2f}"
-        print(f"{arch} [engine/{mode}]: {len(prompt_lens)} requests "
-              f"({', '.join(str(n) for n in prompt_lens)} prompt tokens, "
-              f"{gen} new each) on {max_slots} slots — "
-              f"{eng.stats['decode_tokens']} decode tokens in "
-              f"{eng.stats['decode_s']:.2f}s "
-              f"({th['decode_tok_per_s']:.1f} tok/s, occupancy "
-              f"{th['slot_occupancy']:.2f}); one-shot prefill "
-              f"{th['prefill_tok_per_s']:.1f} tok/s")
+        if speculative:
+            sm = eng.serving_meta.get("speculative", {})
+            mode += (f"+spec(k={sm.get('draft_k', draft_k)}, draft "
+                     f"s{100 * sm.get('draft_sparsity', 0.0):.0f}/"
+                     f"b{sm.get('draft_bits', draft_bits):.0f})")
+        line = (f"{arch} [engine/{mode}]: {len(prompt_lens)} requests "
+                f"({', '.join(str(n) for n in prompt_lens)} prompt tokens, "
+                f"{gen} new each) on {max_slots} slots — "
+                f"{eng.stats['decode_tokens']} decode tokens in "
+                f"{eng.stats['decode_s']:.2f}s "
+                f"({th['decode_tok_per_s']:.1f} tok/s, occupancy "
+                f"{th['slot_occupancy']:.2f}); one-shot prefill "
+                f"{th['prefill_tok_per_s']:.1f} tok/s")
+        if speculative:
+            line += (f"; acceptance {th['acceptance_rate']:.2f} over "
+                     f"{eng.stats['spec_steps']} rounds")
+        print(line)
     return out

@@ -245,6 +245,52 @@ def decode_attn_parity_check(arch: str, smoke: bool, prompt_lens: list[int],
     return got
 
 
+def speculative_parity_check(arch: str, smoke: bool,
+                             prompt_lens: list[int], gen: int, *,
+                             quantized: bool = True,
+                             compressed: bool = False, packed: bool = False,
+                             pruned: bool = False, sparsity: float = 0.5,
+                             bits_init: float = 8.0, draft_k: int = 4,
+                             draft_sparsity: float = 0.5,
+                             draft_bits: float = 2.0, max_slots: int,
+                             seed: int = 0, verbose: bool = True) -> dict:
+    """Assert the speculative engine's decode is token-identical to the
+    non-speculative engine on the same target weights/prompts/seed.
+
+    The draft/verify loop commits only the *target's* argmaxes (the
+    accepted prefix plus the verify pass's free token), so identity is
+    the protocol's structural guarantee — any divergence means the
+    rollback or position bookkeeping corrupted the target arena, which
+    is exactly what this smoke exists to catch. The draft config is
+    deliberately aggressive (s50 + b2 by default): a near-zero-acceptance
+    draft maximizes rollback traffic. Raises AssertionError on
+    divergence — the CI smoke for `serve --speculative --smoke`. Returns
+    the speculative arm's output (the run that printed the report)."""
+    import numpy as np
+
+    from repro.launch.engine import engine_serve
+    want = engine_serve(arch, smoke, prompt_lens, gen, quantized=quantized,
+                        compressed=compressed, packed=packed, pruned=pruned,
+                        sparsity=sparsity, bits_init=bits_init,
+                        max_slots=max_slots, seed=seed, verbose=False)
+    got = engine_serve(arch, smoke, prompt_lens, gen, quantized=quantized,
+                       compressed=compressed, packed=packed, pruned=pruned,
+                       sparsity=sparsity, bits_init=bits_init,
+                       max_slots=max_slots, seed=seed, verbose=verbose,
+                       speculative=True, draft_k=draft_k,
+                       draft_sparsity=draft_sparsity, draft_bits=draft_bits)
+    assert sorted(got) == sorted(want), (sorted(got), sorted(want))
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"speculative decode diverged from the "
+                    f"non-speculative engine (request {rid})")
+    print(f"{arch}: speculative decode (draft k={draft_k}, "
+          f"s{100 * draft_sparsity:.0f}/b{draft_bits:.0f}) token-identical "
+          f"to the non-speculative engine over {len(want)} requests")
+    return got
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -290,6 +336,23 @@ def main():
     ap.add_argument("--sparsity", type=float, default=0.5,
                     help="pruned mode: target fraction of prunable units "
                          "removed (default 0.5)")
+    ap.add_argument("--speculative", action="store_true", default=False,
+                    help="engine mode: self-speculative decoding — a "
+                         "pruned+packed subnet of the same checkpoint "
+                         "drafts up to --draft-k tokens per round and the "
+                         "target verifies them in one chunked pass; output "
+                         "tokens are always the target's (in --smoke mode "
+                         "also asserts token identity vs the "
+                         "non-speculative engine)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative mode: max draft proposals per round")
+    ap.add_argument("--draft-sparsity", type=float, default=50.0,
+                    help="speculative mode: draft subnet sparsity — a "
+                         "percentage (50) or fraction (0.5); 0 keeps all "
+                         "units (packed-only draft)")
+    ap.add_argument("--draft-bits", type=float, default=2.0,
+                    help="speculative mode: draft quantizer init width "
+                         "(packed storage bits)")
     ap.add_argument("--no-decode-attn", dest="decode_attn",
                     action="store_false", default=True,
                     help="disable the fused flash-decode attention kernel "
@@ -324,6 +387,23 @@ def main():
         lens = [int(x) for x in args.prompt_lens.split(",")]
     else:
         lens = [args.prompt_len] * args.batch
+    # `--draft-sparsity 50` and `--draft-sparsity 0.5` mean the same thing
+    draft_sparsity = (args.draft_sparsity / 100.0
+                      if args.draft_sparsity > 1.0 else args.draft_sparsity)
+    if args.speculative and args.smoke:
+        # CI smoke contract: speculative decode == non-speculative decode,
+        # token for token (the draft only sets speed). The speculative arm
+        # *is* the serving run, so nothing decodes twice.
+        speculative_parity_check(args.arch, args.smoke, lens, args.gen,
+                                 quantized=args.quantized,
+                                 compressed=args.compressed,
+                                 packed=args.packed, pruned=args.pruned,
+                                 sparsity=args.sparsity,
+                                 bits_init=args.bits, draft_k=args.draft_k,
+                                 draft_sparsity=draft_sparsity,
+                                 draft_bits=args.draft_bits,
+                                 max_slots=args.slots)
+        return
     if args.decode_attn_parity:
         # CI smoke contract: flash-decode kernel == einsum reference,
         # token for token. The kernel arm *is* the serving run (it prints
@@ -357,7 +437,9 @@ def main():
                  quantized=args.quantized, compressed=args.compressed,
                  packed=args.packed, pruned=args.pruned,
                  sparsity=args.sparsity, bits_init=args.bits,
-                 max_slots=args.slots)
+                 max_slots=args.slots, speculative=args.speculative,
+                 draft_k=args.draft_k, draft_sparsity=draft_sparsity,
+                 draft_bits=args.draft_bits)
 
 
 if __name__ == "__main__":

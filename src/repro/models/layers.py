@@ -393,11 +393,13 @@ def init_attention(key, cfg: ModelConfig, prefix: str, n_layers: int,
 def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
                rope: tuple, window: int = 0, prefix: str,
                cache: Optional[tuple] = None, q_offset: int = 0,
-               shapes: Optional[LayerShapes] = None):
+               shapes: Optional[LayerShapes] = None, chunked: bool = False):
     """lp: per-layer (unstacked) params view. cache: (k_cache, v_cache,
     write_pos) for decode. `shapes` carries this sublayer's physical dims
     (pruned subnets run fewer heads than the config states); default is
-    the dense config. Returns (out, new_cache)."""
+    the dense config. `chunked` scores an S-token chunk mid-sequence
+    against the live cache (the speculative verify pass) instead of
+    treating S > 1 as a from-scratch prefill. Returns (out, new_cache)."""
     B, S, D = x.shape
     shapes = shapes or LayerShapes.from_config(cfg)
     H, KVh, dh = shapes.n_heads, shapes.n_kv_heads, shapes.d_head
@@ -416,6 +418,36 @@ def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
     k = apply_rope(k, cos, sin)
 
     new_cache = None
+    if cache is not None and chunked:
+        # chunked verify (speculative decoding): append S contiguous rows
+        # at each slot's own position and attend all S queries over the
+        # arena at once. Query i sits at absolute position pos[b]+i, so it
+        # sees arena rows [0, pos[b]+i] — the causal prefix including the
+        # rows this very chunk just wrote. Full arenas only: a ring write
+        # can overwrite pre-wrap rows, which a rejection could then never
+        # roll back (the engine gates speculation on window == 0).
+        if window > 0:
+            raise ValueError(
+                f"{prefix}: chunked cache scoring needs a full (non-ring) "
+                f"arena; window={window} layers overwrite rows on wrap")
+        ck, cv, pos = cache
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+        row_upd = lambda c, u, s: jax.lax.dynamic_update_slice(
+            c, u, (s, 0, 0))
+        ck = jax.vmap(row_upd)(ck, k.astype(ck.dtype), pos)
+        cv = jax.vmap(row_upd)(cv, v.astype(cv.dtype), pos)
+        g = H // KVh
+        qh = q.reshape(B, S, KVh, g, dh)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32),
+                            ck.astype(jnp.float32)) / math.sqrt(dh)
+        valid = (jnp.arange(ck.shape[1])[None, None, :]
+                 <= pos[:, None, None] + jnp.arange(S)[None, :, None])
+        scores = jnp.where(valid[:, None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cv.astype(jnp.float32))
+        out = out.reshape(B, S, H * dh).astype(x.dtype)
+        out = qa(out, qp, f"{prefix}.attn_out.aq")
+        return dense_proj(out, lp, qp, f"{prefix}.wo"), (ck, cv, pos + S)
     if cache is not None and S > 1:
         # one-shot prefill: write the whole prompt's K/V at positions
         # [0, S) in a single slice update and attend causally over the

@@ -514,6 +514,87 @@ class LM:
             logits = logits.reshape(B, 1, cfg.num_codebooks, cfg.vocab_padded)
         return logits, new_caches
 
+    def verify_chunk(self, params: dict, qparams: Optional[dict],
+                     caches: dict, tokens, pos):
+        """Score a T-token chunk mid-sequence against the live caches —
+        the speculative verify pass. tokens: (B, T) where column 0 is the
+        last committed token of each slot and columns 1..T-1 are draft
+        proposals; pos: (B,) absolute position of column 0. One batched
+        pass writes K/V rows [pos, pos+T) per slot and returns logits for
+        all T positions (a leading-match acceptance rule then commits the
+        argmaxes) — T target decode steps for the price of one dispatch,
+        the same GEMM-shaping win one-shot prefill gets at admission.
+
+        Attention-mixer layers only: mamba/rwkv carry a recurrent state
+        that a rejected suffix cannot roll back (KV rows can be zeroed;
+        an SSM state cannot be un-stepped). Full (window == 0) arenas
+        only, for the same reason — ring wrap overwrites history.
+        Returns (logits (B, T, V), new_caches)."""
+        cfg = self.cfg
+        bad = [sub.mixer for sub in self.plan if sub.mixer != "attn"]
+        if bad:
+            raise ValueError(
+                f"verify_chunk needs attention mixers everywhere (rollback "
+                f"zeroes KV rows); plan has {sorted(set(bad))} layers whose "
+                f"recurrent state cannot be rolled back")
+        if cfg.num_codebooks:
+            raise ValueError("verify_chunk serves plain token LMs")
+        params, qp_body = self._prequantize(params, qparams)
+        x = self._embed_tokens(params, tokens)
+        B, T = x.shape[0], x.shape[1]
+        # rope at each slot's absolute positions pos[b] + [0, T)
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+        posf = (pos[:, None] + jnp.arange(T)[None, :]).astype(jnp.float32)
+        freqs = cfg.rope_theta ** (-jnp.arange(0, cfg.d_head, 2,
+                                               dtype=jnp.float32) / cfg.d_head)
+        ang = posf[..., None] * freqs[None, None, :]
+        rope = (jnp.cos(ang), jnp.sin(ang))                 # (B, T, dh/2)
+
+        def body(x, inp):
+            lp = inp["p"]
+            cc = inp["c"]
+            new_c = {}
+            for sub, shp in zip(self.plan, self.shapes):
+                pre = f"blocks.{sub.j}"
+                h = Lyr.rmsnorm(x, lp[f"{pre}.norm1"], cfg.norm_eps)
+                mix, nc = Lyr.attn_apply(
+                    lp, qp_body, cfg, h, rope=rope, window=cfg.window,
+                    prefix=f"{pre}.attn", shapes=shp, chunked=True,
+                    cache=(cc[f"{pre}.k"], cc[f"{pre}.v"], pos))
+                new_c[f"{pre}.k"], new_c[f"{pre}.v"], _ = nc
+                x = x + mix
+                if sub.ffn == "none":
+                    continue
+                h2 = Lyr.rmsnorm(x, lp[f"{pre}.norm2"], cfg.norm_eps)
+                if sub.ffn == "mlp":
+                    f = Lyr.mlp_apply(lp, qp_body, cfg, h2,
+                                      prefix=f"{pre}.mlp")
+                else:
+                    # serving semantics, like prefill: chunk tokens never
+                    # compete for expert capacity (one-token decode can't
+                    # overflow, so a dropping verify would diverge from
+                    # the sequential decode it stands in for)
+                    f = Lyr.moe_apply(lp, qp_body, cfg, h2,
+                                      prefix=f"{pre}.moe",
+                                      full_capacity=True, shapes=shp)
+                x = x + f
+            return x, new_c
+
+        bp = self._block_params(params)
+        if self.n_blocks <= 2:
+            new_list = []
+            for i in range(self.n_blocks):
+                x, nc = body(x, {"p": {k: v[i] for k, v in bp.items()},
+                                 "c": {k: v[i] for k, v in caches.items()}})
+                new_list.append(nc)
+            new_caches = {k: jnp.stack([nc[k] for nc in new_list])
+                          for k in new_list[0]}
+        else:
+            x, new_caches = jax.lax.scan(body, x, {"p": bp, "c": caches})
+        x = Lyr.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x)
+        return logits, new_caches
+
     def prefill(self, params: dict, qparams: Optional[dict], caches: dict,
                 tokens, vision_embeds=None, last_logit_only: bool = False):
         """One-shot parallel prefill: a single full-sequence pass that also

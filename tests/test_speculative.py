@@ -1,0 +1,377 @@
+"""Speculative decoding test tier: the greedy token-identity oracle, the
+dual-arena rollback property, and the engine scheduler invariants.
+
+Greedy self-speculative decode commits only the *target's* argmaxes, so
+token identity with a never-drafted engine is structural — any draft, at
+any quality, must reproduce the plain engine's stream bit-for-bit. That
+makes identity the one oracle that needs no tolerance: the matrix below
+pins it for every (target arch x draft config x k) cell, including
+budgets that end mid-draft-window.
+
+The rollback property is the second hard invariant: full (window == 0)
+arenas keep every row beyond the written prefix at zero init, so after
+any accept/reject history both arenas must be bitwise equal to a
+never-drafted engine's state — rows >= pos all-zero, pos/last_tok in
+lockstep with the committed stream. `_assert_never_drafted_state` checks
+it after every speculative round; the deterministic sweep here drives it
+over fixed request mixes, and `tests/test_speculative_properties.py`
+drives the same assertion under hypothesis-drawn mixes (derandomized via
+the conftest "repro" profile).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.subnet import prepare_serving
+from repro.launch.engine import Engine, build_engine, engine_serve, \
+    synthetic_prompts
+from repro.launch.speculative import build_checkpoint_engines, build_draft, \
+    pow2_floor, rollback_rows
+from repro.models.transformer import LM
+
+ARCH = "internlm2-1.8b"
+LENS, GEN = [6, 4], 12          # gen-1 = 11: budgets end mid-draft-window
+MAX_SEQ = max(LENS) + GEN
+
+# target serving modes x draft aggressiveness: the identity oracle must
+# hold when the *target itself* is a compressed artifact (pruned slice /
+# packed sub-byte codes), not just dense fake-quant
+TARGETS = {
+    "dense": {},
+    "pruned_s50": dict(pruned=True, sparsity=0.5),
+    "packed_b4": dict(packed=True, bits_init=4.0),
+}
+DRAFTS = {
+    # s0/b8 packed subnet == the target function (PR 4/5 parity): ~all
+    # proposals accept, exercising full-window commits + the k_eff cap
+    "faithful": dict(draft_sparsity=0.0, draft_bits=8.0),
+    # s50/b2: near-zero acceptance, maximal rollback traffic
+    "aggressive": dict(draft_sparsity=0.5, draft_bits=2.0),
+}
+
+_REF: dict[str, dict[int, np.ndarray]] = {}
+
+
+def _reference(target: str) -> dict[int, np.ndarray]:
+    """Never-drafted engine output per target mode, computed once."""
+    if target not in _REF:
+        _REF[target] = engine_serve(ARCH, True, LENS, GEN, max_slots=2,
+                                    verbose=False, **TARGETS[target])
+    return _REF[target]
+
+
+# ------------------------------------------------------- identity oracle
+@pytest.mark.parametrize("draft_tag", sorted(DRAFTS))
+@pytest.mark.parametrize("target", sorted(TARGETS))
+def test_speculative_token_identity(target, draft_tag):
+    """Every (target x draft x k in {1,2,4,8}) cell emits the plain
+    engine's exact token stream. One engine per cell pair; k varies by
+    mutating draft_k between drains (the jitted spec-step set is shared,
+    so the matrix costs 6 builds, not 24)."""
+    ref = _reference(target)
+    eng, lm = build_engine(ARCH, True, max_slots=2, max_seq=MAX_SEQ,
+                           speculative=True, draft_k=8,
+                           **TARGETS[target], **DRAFTS[draft_tag])
+    prompts = synthetic_prompts(lm.cfg, LENS)
+    for k in (1, 2, 4, 8):
+        eng.draft_k = k
+        rids = [eng.submit(p, GEN) for p in prompts]
+        out = eng.run()
+        assert sorted(out) == sorted(rids)
+        for i, rid in enumerate(rids):
+            np.testing.assert_array_equal(
+                out[rid], ref[i],
+                err_msg=f"target={target} draft={draft_tag} k={k} req={i}")
+
+
+def test_speculative_token_identity_moe_target():
+    """verify_chunk's full-capacity MoE routing: a chunked verify pass
+    must route exactly like the one-token decode steps it replaces."""
+    arch, lens, gen = "llama4-maverick-400b-a17b", [5, 3], 6
+    ref = engine_serve(arch, True, lens, gen, max_slots=2, verbose=False)
+    out = engine_serve(arch, True, lens, gen, max_slots=2, verbose=False,
+                       speculative=True, draft_k=4,
+                       draft_sparsity=0.5, draft_bits=4.0)
+    assert sorted(out) == sorted(ref)
+    for rid in ref:
+        np.testing.assert_array_equal(out[rid], ref[rid],
+                                      err_msg=f"request {rid}")
+
+
+def test_budget_smaller_than_draft_window():
+    """max_new_tokens hit mid-window: gen=2 leaves one remaining token
+    after admission, so every round runs the k_eff=0 degenerate verify —
+    and a 3-token budget rides a single k_eff=1 window. Both must match
+    the plain engine and never overshoot the budget."""
+    eng, lm = build_engine(ARCH, True, max_slots=2, max_seq=MAX_SEQ,
+                           speculative=True, draft_k=8,
+                           **DRAFTS["faithful"])
+    prompts = synthetic_prompts(lm.cfg, LENS)
+    for gen in (2, 3):
+        plain = engine_serve(ARCH, True, LENS, gen, max_slots=2,
+                             verbose=False)
+        rids = [eng.submit(p, gen) for p in prompts]
+        out = eng.run()
+        for i, rid in enumerate(rids):
+            assert len(out[rid]) == gen
+            np.testing.assert_array_equal(out[rid], plain[i],
+                                          err_msg=f"gen={gen} req={i}")
+
+
+# -------------------------------------------------------------- rollback
+_ROLLBACK: dict = {}
+
+
+def _rollback_engines():
+    """One spec engine with a *garbage* draft (different random init:
+    proposals are noise, so nearly every round rejects and rolls back)
+    plus its never-drafted twin — built once, reused across cases
+    (admission overwrites whole arena rows, so reuse is exactly the
+    slot-recycling the engine already guarantees)."""
+    if not _ROLLBACK:
+        cfg = get_arch(ARCH, smoke=True)
+        if cfg.dtype != "float32":
+            cfg = dataclasses.replace(cfg, dtype="float32")
+        lm = LM(cfg)
+        params, _ = lm.init(jax.random.PRNGKey(0))
+        garbage, _ = LM(cfg).init(jax.random.PRNGKey(7))
+        draft = build_draft(ARCH, True, garbage, sparsity=0.5, bits=2.0)
+        params, qparams, _ = prepare_serving(lm, params)
+        _ROLLBACK["spec"] = Engine(lm, params, qparams, max_slots=2,
+                                   max_seq=16, draft=draft, draft_k=4)
+        _ROLLBACK["plain"] = Engine(lm, params, qparams, max_slots=2,
+                                    max_seq=16)
+        _ROLLBACK["lm"] = lm
+    return _ROLLBACK["spec"], _ROLLBACK["plain"], _ROLLBACK["lm"]
+
+
+def _assert_never_drafted_state(spec: Engine) -> None:
+    """For every active slot: both arenas' rows >= pos are bitwise zero
+    (the never-drafted state — fresh arenas never wrote them, admission
+    inserts whole rows built in zeroed prefill caches, and rollback
+    re-zeroes every rejected row), and pos/last_tok agree with the
+    committed stream."""
+    for slot, req in enumerate(spec.active):
+        if req is None:
+            continue
+        pos = int(spec.pos[slot])
+        # admission emits one token before any arena row exists for it:
+        # last_tok is fed (and its row written) at pos
+        assert pos == req.prompt.size + len(req.tokens) - 1
+        assert int(spec.last_tok[slot]) == req.tokens[-1]
+        for arena in (spec.caches, spec.dcaches):
+            for c in jax.tree_util.tree_leaves(arena):
+                tail = np.asarray(c[:, slot, pos:])
+                assert not np.any(tail), \
+                    f"slot {slot}: non-zero rows beyond pos={pos}"
+
+
+def run_rollback_case(lens, gens, draft_k) -> None:
+    """Drive one request mix through the garbage-draft engine one
+    speculative round at a time, asserting the never-drafted-state
+    invariant after every round and final token identity at drain.
+    Shared with the hypothesis module, which draws the arguments."""
+    spec, plain, lm = _rollback_engines()
+    spec.draft_k = draft_k
+    prompts = synthetic_prompts(lm.cfg, list(lens))
+    for p, g in zip(prompts, gens):
+        spec.submit(p, g)
+        plain.submit(p, g)
+    while spec.pending:
+        spec.step()
+        _assert_never_drafted_state(spec)
+    out, ref = spec.run(), plain.run()
+    for (_, got), (_, want) in zip(sorted(out.items()),
+                                   sorted(ref.items())):
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("lens,gens,draft_k", [
+    ([5], [8], 4),                  # deep rollbacks on one slot
+    ([2, 6], [8, 3], 4),            # staggered budgets, mid-flight evict
+    ([4, 4, 5], [1, 7, 4], 8),      # queue > slots, k_eff sweeps down
+    ([3, 3], [2, 2], 1),            # k_eff in {0, 1} only
+])
+def test_rollback_restores_never_drafted_state(lens, gens, draft_k):
+    run_rollback_case(lens, gens, draft_k)
+
+
+def test_rollback_rows_unit():
+    """rollback_rows zeroes exactly [lo, hi] per slot and nothing else."""
+    c = {"x": jnp.ones((2, 3, 8, 2), jnp.float32)}
+    out = rollback_rows(c, lo=[2, 5, 8], hi=[4, 5, 7])["x"]
+    out = np.asarray(out)
+    want = np.ones((8,), np.float32)
+    for slot, (lo, hi) in enumerate([(2, 4), (5, 5), (8, 7)]):
+        w = want.copy()
+        w[lo:hi + 1] = 0.0               # slot 2: empty range, no-op
+        np.testing.assert_array_equal(out[:, slot, :, :],
+                                      np.broadcast_to(w[None, :, None],
+                                                      (2, 8, 2)))
+
+
+# ------------------------------------------------- scheduler invariants
+def test_spec_slot_reuse_isolated():
+    """A request admitted into a recycled slot of a speculative engine
+    decodes exactly as if it ran alone — draft-arena state included."""
+    eng, lm = build_engine(ARCH, True, max_slots=1, max_seq=16,
+                           speculative=True, draft_k=4,
+                           **DRAFTS["aggressive"])
+    prompts = synthetic_prompts(lm.cfg, [5, 5, 5])
+    rid = eng.submit(prompts[2], 6)
+    want = eng.run()[rid]
+    rids = [eng.submit(p, 6) for p in prompts]
+    out = eng.run()
+    np.testing.assert_array_equal(out[rids[2]], want)
+
+
+def test_spec_eviction_mid_draft():
+    """Mixed budgets on fewer slots than requests: requests finish and
+    evict between speculative rounds, later requests are admitted into
+    the freed slots mid-flight — stream still matches the plain engine,
+    and min-remaining k_eff never overshoots any slot's budget."""
+    gens = [2, 9, 5]
+    eng, lm = build_engine(ARCH, True, max_slots=2, max_seq=16,
+                           speculative=True, draft_k=8,
+                           **DRAFTS["faithful"])
+    plain, _ = build_engine(ARCH, True, max_slots=2, max_seq=16)
+    prompts = synthetic_prompts(lm.cfg, [4, 4, 4])
+    rids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    prids = [plain.submit(p, g) for p, g in zip(prompts, gens)]
+    out, ref = eng.run(), plain.run()
+    for r, pr, g in zip(rids, prids, gens):
+        assert len(out[r]) == g
+        np.testing.assert_array_equal(out[r], ref[pr])
+    assert eng.stats["evicted"] == len(gens)
+
+
+def test_spec_throughput_counts_accepted_not_drafted():
+    """decode_tokens (and so the headline tok/s) counts only committed
+    tokens; drafted-but-rejected work is visible only as the
+    spec_drafted/spec_accepted gap."""
+    eng, lm = build_engine(ARCH, True, max_slots=2, max_seq=MAX_SEQ,
+                           speculative=True, draft_k=4,
+                           **DRAFTS["aggressive"])
+    prompts = synthetic_prompts(lm.cfg, LENS)
+    rids = [eng.submit(p, GEN) for p in prompts]
+    out = eng.run()
+    total = sum(len(out[r]) for r in rids)
+    # admission emits each request's first token outside decode counting
+    assert eng.stats["decode_tokens"] == total - len(rids)
+    assert eng.stats["spec_accepted"] <= eng.stats["spec_drafted"]
+    assert eng.stats["spec_steps"] > 0
+    th = eng.throughput()
+    assert th["accepted_tok_per_s"] == th["decode_tok_per_s"]
+    assert 0.0 <= th["acceptance_rate"] <= 1.0
+
+
+def test_spec_accounting_exact():
+    """Deterministic accounting trace with a faithful (always-accepted)
+    draft, one slot, prompt 5 / budget 7 / draft_k 4:
+      admit: tokens=[t0]                         (not a decode token)
+      round 1: rem=6 -> k_eff=4, all accepted -> commit 5
+      round 2: rem=1 -> k_eff=0 (plain verify) -> commit 1, done
+    """
+    eng, lm = build_engine(ARCH, True, max_slots=1, max_seq=16,
+                           speculative=True, draft_k=4,
+                           **DRAFTS["faithful"])
+    rid = eng.submit(synthetic_prompts(lm.cfg, [5])[0], 7)
+    out = eng.run()
+    assert len(out[rid]) == 7
+    s = eng.stats
+    assert s["spec_steps"] == 2
+    assert s["decode_steps"] == (4 + 1) + (0 + 1)
+    assert s["decode_tokens"] == 6
+    assert s["spec_drafted"] == 4
+    assert s["spec_accepted"] == 4
+    assert eng.throughput()["acceptance_rate"] == 1.0
+
+
+def test_spec_warmup_compiled_shape_set_bounded():
+    """warmup() compiles exactly the {0} + powers-of-two <= draft_k
+    spec-step set; no workload mix may add a compile afterwards (the
+    k_eff pow2 quantization is what guarantees it)."""
+    eng, lm = build_engine(ARCH, True, max_slots=2, max_seq=MAX_SEQ,
+                           speculative=True, draft_k=8,
+                           **DRAFTS["aggressive"])
+    assert eng._spec_ks() == [0, 1, 2, 4, 8]
+    eng.warmup()
+    compiled = eng._spec._cache_size()
+    assert compiled == len(eng._spec_ks())
+    prompts = synthetic_prompts(lm.cfg, LENS)
+    for gen in (1, 2, 5, 9, GEN):          # every k_eff regime
+        for p in prompts:
+            eng.submit(p, gen)
+        eng.run()
+    assert eng._spec._cache_size() == compiled
+
+
+def test_window_raises_on_speculative_engine():
+    """_window's fused scan schedules events assuming one token per slot
+    per step; a spec round commits 1..k+1, so the engine must refuse it
+    (run() routes speculative engines through step())."""
+    eng, lm = build_engine(ARCH, True, max_slots=1, max_seq=16,
+                           speculative=True, draft_k=2,
+                           **DRAFTS["aggressive"])
+    eng.submit(synthetic_prompts(lm.cfg, [4])[0], 4)
+    with pytest.raises(RuntimeError, match="one token per slot"):
+        eng._window()
+    assert len(eng.run()[0]) == 4          # step()-driven drain still works
+
+
+# ------------------------------------------------------------ gating
+def test_spec_rejects_windowed_and_stateful_archs():
+    """Ring arenas (window > 0) and recurrent mixers cannot be rolled
+    back; the engine (and verify_chunk itself) must refuse, not corrupt."""
+    draft = build_draft(ARCH, True, sparsity=0.5, bits=2.0)
+    cfg = get_arch(ARCH, smoke=True)
+    lm = LM(dataclasses.replace(cfg, window=8))
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="window"):
+        Engine(lm, params, None, max_seq=16, draft=draft)
+
+    rcfg = get_arch("rwkv6-3b", smoke=True)
+    rlm = LM(rcfg)
+    rparams, _ = rlm.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="attention mixers"):
+        Engine(rlm, rparams, None, max_seq=16, draft=draft)
+    with pytest.raises(ValueError, match="rolled back"):
+        rlm.verify_chunk(rparams, None, None,
+                         jnp.zeros((1, 2), jnp.int32),
+                         jnp.zeros((1,), jnp.int32))
+
+    lm2 = LM(cfg)
+    params2, _ = lm2.init(jax.random.PRNGKey(0))
+    for bad_k in (0, 16):
+        with pytest.raises(ValueError, match="draft_k"):
+            Engine(lm2, params2, None, max_seq=16, draft=draft,
+                   draft_k=bad_k)
+
+
+def test_pow2_floor():
+    assert [pow2_floor(k) for k in (0, 1, 2, 3, 4, 7, 8, 9)] == \
+        [0, 1, 2, 2, 4, 4, 8, 8]
+
+
+# --------------------------------------------- checkpoint-surrogate pair
+def test_checkpoint_engines_high_acceptance_and_identity():
+    """The GETA deployment configuration: masked (cooldown-style)
+    checkpoint as target, its own sliced b8 subnet as draft. The subnet
+    *is* the target at the surviving widths, so acceptance must be ~1
+    while identity holds — the speculative speedup's existence proof."""
+    spec, base, lm = build_checkpoint_engines(ARCH, True, sparsity=0.5,
+                                              draft_bits=8.0, draft_k=4,
+                                              max_slots=2, max_seq=24)
+    prompts = synthetic_prompts(lm.cfg, [6, 4])
+    for p in prompts:
+        spec.submit(p, 12)
+        base.submit(p, 12)
+    out, ref = spec.run(), base.run()
+    for (_, got), (_, want) in zip(sorted(out.items()),
+                                   sorted(ref.items())):
+        np.testing.assert_array_equal(got, want)
+    assert spec.throughput()["acceptance_rate"] >= 0.9

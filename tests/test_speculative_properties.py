@@ -1,0 +1,34 @@
+"""Property-based speculative-rollback invariants (hypothesis).
+
+For hypothesis-drawn request mixes (prompt lengths, token budgets, slot
+pressure, draft window), after every speculative round both KV arenas
+must be bitwise indistinguishable from a never-drafted engine: rows
+beyond each active slot's pos are zero (the zero-rollback contract of
+`launch.speculative.rollback_rows` on full arenas), pos/last_tok track
+the committed stream exactly, and the drained output matches the plain
+engine token-for-token. The engine under test carries a *garbage* draft
+(different random init), so nearly every round rejects at some depth —
+the draws explore rollback depths and admission/eviction interleavings,
+not model quality. Runs under the conftest "repro" derandomized profile;
+the deterministic sweep in tests/test_speculative.py drives the same
+`run_rollback_case` when hypothesis is absent.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")  # property-based tests; see requirements-dev.txt
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from test_speculative import run_rollback_case  # noqa: E402
+
+
+@given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_rollback_restores_never_drafted_state_random(data):
+    n = data.draw(st.integers(1, 3), label="n_requests")
+    lens = data.draw(st.lists(st.integers(2, 6), min_size=n, max_size=n),
+                     label="prompt_lens")
+    gens = data.draw(st.lists(st.integers(1, 8), min_size=n, max_size=n),
+                     label="gens")
+    draft_k = data.draw(st.sampled_from([1, 2, 4, 8]), label="draft_k")
+    run_rollback_case(lens, gens, draft_k)
