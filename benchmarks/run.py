@@ -597,6 +597,107 @@ def bench_engine_decode_speculative(fast=False):
     return results
 
 
+def bench_engine_paged_kv(fast=False):
+    """Paged + quantized KV arena (DESIGN.md §4.11): concurrency at a
+    fixed KV HBM budget.
+
+    Workload: requests sharing one hot "system prompt" (page-aligned),
+    short per-request generations — the serving shape prefix sharing and
+    page-granular allocation exist for. The contiguous arena pins
+    max_seq rows per slot no matter what; the paged arena charges each
+    request only its *owned* pages (the shared prompt is pinned once,
+    refcounted), stored as int8 codes + per-row scales. The headline row
+    divides the contiguous per-request bytes by the paged *marginal*
+    per-request bytes (measured from the engine's own allocation
+    accounting with every slot live) — how many more concurrent
+    requests the same KV HBM holds — and asserts the ISSUE's >=2x. An
+    unshared (all-distinct prompts) row isolates what quantization alone
+    buys. Persists to BENCH_paged.json at the repo root."""
+    import json
+    import os
+
+    from repro.launch.engine import build_engine, synthetic_prompts
+
+    slots = 4
+    sys_len, gen = 16, 8
+    page_size = 8
+    max_seq = sys_len + gen
+
+    def admitted_kv_bytes(eng, prompts, n):
+        # submit n requests and run exactly one engine step: every slot
+        # admits (allocating its pages) and decodes once, so kv_bytes()
+        # reads the arena with all n requests live
+        for p in prompts[:n]:
+            eng.submit(p, gen)
+        eng.step()
+        return eng.kv_bytes()
+
+    contig, lm = build_engine("internlm2-1.8b", True, max_slots=slots,
+                              max_seq=max_seq)
+    per_req_contig = contig.kv_bytes() // slots
+    _row("engine_paged_kv_contiguous_per_request", 0.0,
+         f"bytes={per_req_contig};max_seq={max_seq}")
+
+    def marginal(shared):
+        eng, _ = build_engine("internlm2-1.8b", True, max_slots=slots,
+                              max_seq=max_seq, paged=True,
+                              page_size=page_size, kv_bits=8)
+        prompts = synthetic_prompts(lm.cfg, [sys_len] * slots)
+        if shared:
+            prompts = [prompts[0].copy() for _ in prompts]
+        eng.warmup()
+        b1 = admitted_kv_bytes(eng, prompts, 1)
+        bn = admitted_kv_bytes(eng, prompts[1:], slots - 1)
+        eng.run()
+        return (bn - b1) // (slots - 1), b1, eng
+
+    per_req_shared, base_shared, eng_s = marginal(shared=True)
+    _row("engine_paged_kv_paged_int8_shared_marginal", 0.0,
+         f"bytes={per_req_shared};base={base_shared};"
+         f"prefix_hits={eng_s.stats['prefix_hits']};"
+         f"page_size={page_size}")
+    per_req_unshared, base_unshared, _ = marginal(shared=False)
+    _row("engine_paged_kv_paged_int8_unshared_marginal", 0.0,
+         f"bytes={per_req_unshared};base={base_unshared}")
+
+    # concurrency at the contiguous engine's own KV budget: how many
+    # requests fit in the HBM the contiguous arena pins for `slots`
+    budget = contig.kv_bytes()
+    fit_paged = (budget - base_shared) // max(per_req_shared, 1) + 1
+    concurrency_x = per_req_contig / max(per_req_shared, 1)
+    _row("engine_paged_kv_concurrency", 0.0,
+         f"{concurrency_x:.2f}x;contig_fits={slots};"
+         f"paged_fits={fit_paged};budget={budget}")
+    assert concurrency_x >= 2.0, (
+        f"paged+int8+shared concurrency {concurrency_x:.2f}x < 2x")
+
+    results = {
+        "contiguous_per_request_bytes": int(per_req_contig),
+        "paged_int8_shared_marginal_bytes": int(per_req_shared),
+        "paged_int8_unshared_marginal_bytes": int(per_req_unshared),
+        "paged_base_bytes_shared": int(base_shared),
+        "paged_base_bytes_unshared": int(base_unshared),
+        "kv_budget_bytes": int(budget),
+        "requests_at_budget": {"contiguous": slots,
+                               "paged_int8_shared": int(fit_paged)},
+        "concurrency_x": float(concurrency_x),
+        "prefix_hits": int(eng_s.stats["prefix_hits"]),
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_paged.json")
+    payload = {
+        "bench": "engine_paged_kv",
+        "arch": "internlm2-1.8b(smoke)",
+        "workload": {"slots": slots, "system_prompt_len": sys_len,
+                     "gen": gen, "page_size": page_size, "kv_bits": 8},
+        "host_backend": jax.default_backend(),
+        "rows": results,
+    }
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return results
+
+
 def bench_sharded_train_scaling(fast=False):
     """1 -> N-device GETA train-step scaling (data-parallel, deterministic
     ordered reduction — DESIGN.md §5).
@@ -664,7 +765,7 @@ ALL = [bench_table2_resnet20, bench_table3_bert, bench_table4_vgg7,
        bench_engine_prefill, bench_engine_continuous,
        bench_engine_decode_pruned, bench_engine_decode_packed,
        bench_engine_decode_attn, bench_engine_decode_speculative,
-       bench_sharded_train_scaling]
+       bench_engine_paged_kv, bench_sharded_train_scaling]
 
 
 def main() -> None:

@@ -15,6 +15,12 @@ attaches the self-speculative draft — the same checkpoint sliced to
 `--draft-k` tokens per round, the target verifies them in one chunked
 pass, and the output stream stays token-identical to the plain engine
 (DESIGN.md §4.10); the report line adds the acceptance rate.
+`--paged` swaps the per-slot contiguous KV arena for the paged block
+arena (DESIGN.md §4.11): per-request KV is page-granular, identical
+prompts share refcounted pages and skip their prefill (`--hot-prompt`
+sends every request the same prompt — watch `prefix_hits`), and
+`--kv-bits 8|4` stores the pages as int8/nibble-packed codes
+dequantized in-VMEM by the flash-decode kernel.
 
     PYTHONPATH=src python examples/serve_engine.py --packed --pruned \
         --bits 4 --prompt-lens 16,4,9,12 --gens 24,8,16,12 --slots 2
@@ -22,6 +28,9 @@ pass, and the output stream stays token-identical to the plain engine
     PYTHONPATH=src python examples/serve_engine.py --speculative \
         --draft-k 4 --draft-sparsity 0 --draft-bits 8 \
         --prompt-lens 16,4,9,12 --gens 24,8,16,12 --slots 2
+
+    PYTHONPATH=src python examples/serve_engine.py --paged --kv-bits 8 \
+        --hot-prompt --prompt-lens 16,16,16,9 --gens 12 --slots 2
 
 (On these random-init smoke weights only a keep-all draft tracks the
 target — `--draft-sparsity 0` shows acceptance ~1.0. A GETA cooldown
@@ -72,7 +81,22 @@ def main():
     ap.add_argument("--draft-bits", type=float, default=8.0,
                     help="draft quantizer width (8 tracks the target "
                          "closely; 2 is cheap but rarely accepted)")
+    ap.add_argument("--paged", action="store_true", default=False,
+                    help="paged KV arena: page-granular allocation + "
+                         "whole-prompt prefix sharing (DESIGN.md §4.11)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged mode: KV rows per page (multiple of 8)")
+    ap.add_argument("--kv-bits", type=int, default=None, choices=[4, 8],
+                    help="paged mode: int8/int4 page store (implies "
+                         "--paged; approximate numerics)")
+    ap.add_argument("--hot-prompt", action="store_true", default=False,
+                    help="requests with equal --prompt-lens entries send "
+                         "the *identical* prompt (prefixes of the first "
+                         "request's tokens) — the prefix-sharing demo: "
+                         "repeats admit with prefix_hits, no prefill")
     args = ap.parse_args()
+    if args.kv_bits is not None:
+        args.paged = True
 
     lens = [int(x) for x in args.prompt_lens.split(",")]
     gens = [int(x) for x in args.gens.split(",")]
@@ -88,9 +112,12 @@ def main():
                            verbose=True, speculative=args.speculative,
                            draft_k=args.draft_k,
                            draft_sparsity=args.draft_sparsity,
-                           draft_bits=args.draft_bits)
-    rids = [eng.submit(p, g) for p, g in
-            zip(synthetic_prompts(lm.cfg, lens), gens)]
+                           draft_bits=args.draft_bits, paged=args.paged,
+                           page_size=args.page_size, kv_bits=args.kv_bits)
+    prompts = synthetic_prompts(lm.cfg, lens)
+    if args.hot_prompt:
+        prompts = [prompts[0][:n].copy() for n in lens]
+    rids = [eng.submit(p, g) for p, g in zip(prompts, gens)]
     eng.warmup()
     out = eng.run()
     for rid, n, g in zip(rids, lens, gens):
@@ -110,6 +137,10 @@ def main():
                  f"drafted tokens accepted "
                  f"({th['acceptance_rate']:.2f}) over {s['spec_steps']} "
                  f"rounds")
+    if args.paged:
+        line += (f"; paged: {s['prefills']} prefills, "
+                 f"{s['prefix_hits']} prefix hits, kv_bytes "
+                 f"{eng.kv_bytes()} of {eng.kv_pool_bytes()} pooled")
     print(line)
 
 

@@ -288,6 +288,63 @@ def unpack_codes(packed: jax.Array, bits: int, size: int, *,
     return jnp.moveaxis(out, 0, axis)
 
 
+# Storage widths the paged KV arena can hold codes at (DESIGN.md §4.11).
+# Weight containers pack along the GEMM K axis into int32 words
+# (`pack_codes`); KV pages instead pack along d_head into int8 bytes —
+# the page is the streaming unit and a byte stream keeps the in-kernel
+# nibble unpack a shift pair instead of a word-field walk.
+KV_STORAGE_BITS = (4, 8)
+
+
+def kv_quant_encode(x: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric absmax quantization for KV-cache pages.
+
+    x: (..., dh) float rows (one K or V head-row per leading index).
+    Returns (codes int8, scale f32 (...,)): scale = absmax / qmax per
+    row so every write is independent (no page rescaling when a new row
+    lands — the property that makes incremental decode writes exact).
+    All-zero rows encode to codes 0 / scale 0 and decode to exact zeros,
+    preserving the arena zero-init invariant through a quantize-dequantize
+    round trip. bits=4 nibble-packs code pairs along the last axis
+    ((..., dh//2) bytes, low nibble first)."""
+    bits = int(bits)
+    if bits not in KV_STORAGE_BITS:
+        raise ValueError(f"kv bits must be one of {KV_STORAGE_BITS}, "
+                         f"got {bits}")
+    qmax = (1 << (bits - 1)) - 1
+    x32 = jnp.asarray(x).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), axis=-1) / qmax
+    d = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.round(x32 / d[..., None]),
+                     -qmax, qmax).astype(jnp.int32)
+    if bits == 4:
+        if x32.shape[-1] % 2:
+            raise ValueError(f"kv bits=4 packs code pairs; d_head="
+                             f"{x32.shape[-1]} must be even")
+        codes = (codes[..., 0::2] & 0xF) | ((codes[..., 1::2] & 0xF) << 4)
+    return codes.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def kv_quant_decode(codes: jax.Array, scale: jax.Array, bits: int
+                    ) -> jax.Array:
+    """Invert `kv_quant_encode`: int8 codes + per-row scales -> f32 rows.
+
+    Exact for zero rows (scale 0 times codes 0) and idempotent under
+    re-encode at the same bits (round(c*d/d) == c), so a gather ->
+    compute -> re-encode scatter of untouched rows is a no-op."""
+    bits = int(bits)
+    w = jnp.asarray(codes).astype(jnp.int32)
+    if bits == 4:
+        lo = (w << 28) >> 28          # sign-extend the low nibble
+        hi = (w << 24) >> 28          # arithmetic shift: high nibble
+        w = jnp.stack([lo, hi], axis=-1).reshape(
+            w.shape[:-1] + (w.shape[-1] * 2,))
+    elif bits != 8:
+        raise ValueError(f"kv bits must be one of {KV_STORAGE_BITS}, "
+                         f"got {bits}")
+    return w.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
 def tree_bit_widths(qparams: dict[str, QuantParams]) -> dict[str, jax.Array]:
     return {k: bit_width(v.d, v.q_m, v.t) for k, v in qparams.items()}
 

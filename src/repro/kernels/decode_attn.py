@@ -158,3 +158,152 @@ def decode_attn_pallas(q, k, v, pos, *, window: int = 0,
         interpret=interpret,
     )(nv, qp, kp, vp)
     return out[:, :, :g, :dh]
+
+
+def _page_dequant(w, scale, bits):
+    """Decode one int8 code tile (P, dhs) to f32 rows in VMEM.
+
+    Mirrors `core.quant.kv_quant_decode` on a 2D tile: arithmetic-shift
+    nibble unpack for bits=4 (low nibble in byte order first), then the
+    per-row scale. Zero codes with zero scale stay exact zeros, so pool
+    padding and zero-page rows contribute nothing to the dot products.
+    """
+    x = w.astype(jnp.int32)
+    if bits == 4:
+        lo = (x << 28) >> 28
+        hi = (x << 24) >> 28
+        x = jnp.stack([lo, hi], axis=-1).reshape(x.shape[0], x.shape[1] * 2)
+    return x.astype(jnp.float32) * scale[:, None]
+
+
+def _paged_kernel(nv_ref, pt_ref, q_ref, k_ref, v_ref, *rest,
+                  chunk: int, nchunks: int, scale: float, kv_bits):
+    if kv_bits is not None:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    n_valid = nv_ref[b]
+
+    @pl.when(c * chunk < n_valid)
+    def _chunk():
+        q = q_ref[0, 0].astype(jnp.float32)              # (g, dh)
+        kt = k_ref[0, :, 0, :]                           # (chunk, dh*)
+        vt = v_ref[0, :, 0, :]
+        if kv_bits is not None:
+            kt = _page_dequant(kt, ks_ref[0, :, 0], kv_bits)
+            vt = _page_dequant(vt, vs_ref[0, :, 0], kv_bits)
+        else:
+            kt = kt.astype(jnp.float32)
+            vt = vt.astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, kt, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (g, chunk)
+        col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + c * chunk
+        s = jnp.where(col < n_valid, s, _NEG_INF)
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, vt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (g, dh)
+        o_ref[0, 0] = o_ref[0, 0] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(c == nchunks - 1)
+    def _final():
+        o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[:, :1], 1e-30)
+
+
+def paged_decode_attn_pallas(q, kpool, vpool, pos, page_table, *, page_size,
+                             seq_len, kv_bits=None, k_scale=None,
+                             v_scale=None, window: int = 0,
+                             interpret: bool = False) -> jax.Array:
+    """Page-indirect flash decode: the split-K grid of `decode_attn_pallas`
+    with the K-chunk axis walking *logical pages* and the physical page id
+    scalar-prefetched from the slot's page table.
+
+    kpool/vpool: (n_pages, page_size, KVh, dh) pool (dtype rows), or int8
+    codes of byte width dh / dh//2 for kv_bits 8 / 4 plus per-row scales
+    k_scale/v_scale (n_pages, page_size, KVh) f32, decoded in VMEM right
+    after the tile load — the KV analogue of the weight `unpack_dequant`
+    epilogue. page_table: (B, Lp) int32; both it and the per-slot valid
+    length ride in scalar-prefetch SMEM (`PrefetchScalarGridSpec`), so
+    the k/v BlockSpec index map can address tile (pt[b, c], h) directly
+    and only a slot's own pages ever stream into VMEM. Chunk = page_size
+    (must be a multiple of 8). `seq_len` is the logical arena length;
+    masking is the same min(pos+1, seq_len) rule as the contiguous
+    kernel. Returns (B, KVh, g, dh) f32.
+    """
+    del window
+    B, KVh, g, dh = q.shape
+    P = int(page_size)
+    if P % 8:
+        raise ValueError(f"page_size must be a multiple of 8, got {P}")
+    Lp = page_table.shape[1]
+    if Lp * P < seq_len:
+        raise ValueError(f"page table covers {Lp * P} rows < seq_len {seq_len}")
+    dhs = kpool.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    align = 8 if interpret else 128
+
+    # Pad the code byte stream; nibble unpack doubles it back to >= dh.
+    dhsp = _round_up(dhs, align)
+    dhp = dhsp * 2 if kv_bits == 4 else dhsp
+    gp = _round_up(g, 8)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, gp - g), (0, dhp - dh)))
+    kp = jnp.pad(kpool, ((0, 0), (0, 0), (0, 0), (0, dhsp - dhs)))
+    vp = jnp.pad(vpool, ((0, 0), (0, 0), (0, 0), (0, dhsp - dhs)))
+    nv = jnp.minimum(jnp.asarray(pos, jnp.int32).reshape(B) + 1, seq_len)
+    pt = jnp.asarray(page_table, jnp.int32)
+
+    def qmap(b, h, c, nv_ref, pt_ref):
+        return (b, h, 0, 0)
+
+    def kvmap(b, h, c, nv_ref, pt_ref):
+        return (pt_ref[b, c], 0, h, 0)
+
+    def smap(b, h, c, nv_ref, pt_ref):
+        return (pt_ref[b, c], 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, gp, dhp), qmap),
+        pl.BlockSpec((1, P, 1, dhsp), kvmap),
+        pl.BlockSpec((1, P, 1, dhsp), kvmap),
+    ]
+    operands = [qp, kp, vp]
+    if kv_bits is not None:
+        in_specs += [pl.BlockSpec((1, P, 1), smap),
+                     pl.BlockSpec((1, P, 1), smap)]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVh, Lp),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, gp, dhp), qmap),
+        scratch_shapes=[
+            pltpu.VMEM((gp, _LANES), jnp.float32),
+            pltpu.VMEM((gp, _LANES), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, chunk=P, nchunks=Lp, scale=scale,
+                          kv_bits=kv_bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVh, gp, dhp), jnp.float32),
+        interpret=interpret,
+    )(nv, pt, *operands)
+    return out[:, :, :g, :dh]

@@ -168,6 +168,34 @@ def decode_attn_op(q, k, v, pos, *, window=0, chunk=None, interpret=None,
                                   interpret=(backend == "pallas-interpret"))
 
 
+def paged_decode_attn_op(q, kpool, vpool, pos, page_table, *, page_size,
+                         seq_len, kv_bits=None, k_scale=None, v_scale=None,
+                         window=0, interpret=None, backend=None):
+    """Single-query flash-decode attention over a *paged* KV pool.
+
+    kpool/vpool: (n_pages, page_size, KVh, dh) pool pages shared by every
+    slot — or int8 codes (byte width dh for kv_bits=8, dh//2 nibble pairs
+    for kv_bits=4) with per-row f32 scales k_scale/v_scale of shape
+    (n_pages, page_size, KVh), decoded in VMEM by the kernel.
+    page_table: (B, Lp) int32 logical->physical map; unallocated logical
+    pages alias the reserved zero page. `seq_len` is the logical arena
+    length the contiguous engine would use — the valid mask is the same
+    min(pos+1, seq_len) rule, and the xla-ref backend's gathered view is
+    sliced to exactly `seq_len` rows so an unquantized paged engine is
+    bit-identical to the contiguous one (see `ref.paged_decode_attn_ref`).
+    """
+    backend = dispatch.resolve(backend, interpret)
+    if backend == "xla-ref":
+        return _ref.paged_decode_attn_ref(
+            q, kpool, vpool, pos, page_table, page_size=page_size,
+            seq_len=seq_len, kv_bits=kv_bits, k_scale=k_scale,
+            v_scale=v_scale, window=window)
+    return _da.paged_decode_attn_pallas(
+        q, kpool, vpool, pos, page_table, page_size=page_size,
+        seq_len=seq_len, kv_bits=kv_bits, k_scale=k_scale, v_scale=v_scale,
+        window=window, interpret=(backend == "pallas-interpret"))
+
+
 # ------------------------------------------- fused fake-quant (+mask) matmul
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
 def _fq_matmul(x, w, d, q_m, t, backend):
@@ -245,6 +273,7 @@ def fq_masked_matmul_op(x, w, mask, d, q_m, t, *, interpret=None,
 
 # Re-export oracles for tests/benchmarks.
 decode_attn_ref = _ref.decode_attn_ref
+paged_decode_attn_ref = _ref.paged_decode_attn_ref
 fake_quant_fwd_ref = _ref.fake_quant_fwd_ref
 fake_quant_bwd_ref = _ref.fake_quant_bwd_ref
 matmul_ref = _ref.matmul_ref

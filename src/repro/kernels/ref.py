@@ -107,6 +107,49 @@ def decode_attn_ref(q, k, v, pos, *, window=0):
     return out.reshape(B, KVh, g, dh)
 
 
+def paged_decode_attn_ref(q, kpool, vpool, pos, page_table, *, page_size,
+                          seq_len, kv_bits=None, k_scale=None, v_scale=None,
+                          window=0):
+    """Single-query attention over a paged KV pool — the oracle for the
+    page-indirect flash-decode kernel.
+
+    kpool/vpool: (n_pages, page_size, KVh, dh) pool pages (or int8 codes
+    of width dh / dh//2 for kv_bits 8 / 4, with per-row scales
+    k_scale/v_scale of shape (n_pages, page_size, KVh)); page_table:
+    (B, Lp) int32 logical->physical page map per slot. Gathers each
+    slot's pages, dequantizes if the pool is quantized, and slices the
+    flattened rows to `seq_len` — the contiguous arena length — before
+    delegating to `decode_attn_ref`.
+
+    The slice is load-bearing for the paged-vs-contiguous token-identity
+    contract: XLA's reduction grouping varies with the reduced length,
+    so attention over Lp*page_size rows (trailing zeros included) is not
+    bitwise the same as over seq_len rows even though the extra columns
+    carry zero probability. With the slice, an unquantized pool's
+    gathered view is bitwise the contiguous arena (unallocated logical
+    pages alias the zero page, matching the arena's zero-init tail) and
+    this function reduces to the exact legacy composition.
+    """
+    del window
+    pt = jnp.asarray(page_table, jnp.int32)
+    B, Lp = pt.shape
+    P = int(page_size)
+    if Lp * P < seq_len:
+        raise ValueError(f"page table covers {Lp * P} rows < seq_len {seq_len}")
+
+    def gather(pool, scale):
+        pages = jnp.take(pool, pt, axis=0)        # (B, Lp, P, KVh, dh*)
+        if kv_bits is not None:
+            from repro.core.quant import kv_quant_decode
+            pages = kv_quant_decode(pages, jnp.take(scale, pt, axis=0),
+                                    kv_bits)
+        rows = pages.reshape(B, Lp * P, *pages.shape[3:])
+        return rows[:, :seq_len]
+
+    return decode_attn_ref(q, gather(kpool, k_scale), gather(vpool, v_scale),
+                           pos)
+
+
 def packed_quant_matmul_ref(x, packed, bits, scale):
     """y = x @ (unpack(packed) * scale[None, :]) — sub-byte packed weights.
 

@@ -44,11 +44,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
+from repro.core.quant import kv_quant_decode, kv_quant_encode
 from repro.core.subnet import (compression_report, prepare_serving,
                                tree_bytes)
 from repro.data.synthetic import batch_for
+from repro.launch import paging
 from repro.models import layers as model_layers
 from repro.models.transformer import LM
+
+
+def _kv_split(caches: dict) -> tuple[list[str], list[str]]:
+    """Partition cache keys into attention K/V leaves (pool pages under
+    the paged arena) and recurrent-state leaves (always per-slot)."""
+    kv = sorted(k for k in caches
+                if k.endswith(".k") or k.endswith(".v"))
+    state = sorted(k for k in caches
+                   if k not in kv and not k.endswith("_scale"))
+    return kv, state
 
 
 @dataclasses.dataclass
@@ -76,7 +88,9 @@ class Engine:
 
     def __init__(self, lm: LM, params: dict, qparams: Optional[dict], *,
                  max_slots: int = 4, max_seq: int = 64,
-                 draft=None, draft_k: int = 4):
+                 draft=None, draft_k: int = 4, paged: bool = False,
+                 page_size: int = 16, kv_bits: Optional[int] = None,
+                 n_pages: Optional[int] = None, prefix_sharing: bool = True):
         cfg = lm.cfg
         if cfg.num_codebooks or cfg.vision_patches:
             raise ValueError("the engine serves plain token LMs; codebook "
@@ -90,7 +104,33 @@ class Engine:
         self.max_seq = max_seq
         dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self._cache_dtype = dt
-        self.caches = lm.init_cache(max_slots, max_seq, dtype=dt)
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.kv_bits = kv_bits
+        if kv_bits is not None and not self.paged:
+            raise ValueError("kv_bits quantizes the *paged* page store; "
+                             "pass paged=True")
+        if self.paged:
+            # paged block arena: attention K/V live in shared page pools
+            # addressed through per-slot page tables; admission/eviction
+            # become host-side allocator ops (launch/paging.py)
+            self.Lp = paging.pages_for_rows(max_seq, self.page_size)
+            if n_pages is None:
+                # every slot can hold a full-length request, plus one
+                # table's worth of headroom for prefix-cache entries
+                n_pages = paging.N_RESERVED + (max_slots + 1) * self.Lp
+            self.n_pages = int(n_pages)
+            self.alloc = paging.PageAllocator(self.n_pages, self.page_size)
+            self.prefix_cache = (paging.PrefixCache(self.alloc)
+                                 if prefix_sharing else None)
+            self.page_table = np.full((max_slots, self.Lp),
+                                      paging.TRASH_PAGE, np.int32)
+            self.slot_pages: list[list[int]] = [[] for _ in range(max_slots)]
+            self.caches = lm.init_paged_cache(max_slots, self.n_pages,
+                                              self.page_size, dtype=dt,
+                                              kv_bits=kv_bits)
+        else:
+            self.caches = lm.init_cache(max_slots, max_seq, dtype=dt)
         # host-side slot table: position, last emitted token, owner
         self.pos = np.zeros((max_slots,), np.int32)
         self.last_tok = np.zeros((max_slots,), np.int32)
@@ -100,6 +140,8 @@ class Engine:
         self._next_rid = 0
         self.stats = {"decode_steps": 0, "decode_tokens": 0, "decode_s": 0.0,
                       "prefills": 0, "prefill_tokens": 0, "prefill_s": 0.0,
+                      "draft_prefills": 0, "draft_prefill_tokens": 0,
+                      "draft_prefill_s": 0.0, "prefix_hits": 0,
                       "admitted": 0, "evicted": 0,
                       "spec_steps": 0, "spec_drafted": 0, "spec_accepted": 0}
         self.serving_meta: dict = {}   # prepare_serving meta (build_engine)
@@ -127,9 +169,18 @@ class Engine:
                 raise ValueError(
                     f"draft_k={self.draft_k} must be in [1, "
                     f"max_seq={max_seq})")
-            self.dcaches = draft.lm.init_cache(max_slots, max_seq, dtype=dt)
-            self._spec = jax.jit(make_spec_step(lm, draft.lm),
-                                 static_argnums=(8,))
+            if self.paged:
+                # the draft arena pages in lockstep: its own pools (at the
+                # draft's sliced KV shapes) indexed by the *same* page
+                # table and allocator — one allocation covers both arenas
+                self.dcaches = draft.lm.init_paged_cache(
+                    max_slots, self.n_pages, self.page_size, dtype=dt,
+                    kv_bits=kv_bits)
+            else:
+                self.dcaches = draft.lm.init_cache(max_slots, max_seq,
+                                                   dtype=dt)
+            spec_fn = make_spec_step(lm, draft.lm)
+            self._spec = jax.jit(spec_fn, static_argnums=(8,))
 
             def _prefill_draft(dparams, dqparams, tokens):
                 c = draft.lm.init_cache(1, max_seq, dtype=dt)
@@ -181,17 +232,207 @@ class Engine:
         # one compile per distinct window length (static scan trip count)
         self._decode_window = jax.jit(_decode_window, static_argnums=(5,))
 
+        if self.paged:
+            P = self.page_size
+            Lp = self.Lp
+            kvb = self.kv_bits
+            kv_keys, state_keys = _kv_split(self.caches)
+
+            def _pages_view(pt):
+                return model_layers.PagedView(table=pt, page_size=P,
+                                              seq_len=max_seq, kv_bits=kvb)
+
+            def make_insert_pages(kv, state):
+                # scatter a fresh (1, max_seq) prefill cache into the
+                # slot's first npp physical pages (whole-page writes: the
+                # prefill's zero tail keeps page remainders zero), and
+                # slot-insert the recurrent-state leaves as before
+                def ins(caches, row, slot, phys, npp):
+                    new = dict(caches)
+                    for kk in kv:
+                        r = row[kk][:, 0]                 # (nb, S, KVh, dh)
+                        pad = npp * P - r.shape[1]
+                        if pad > 0:
+                            r = jnp.pad(r, ((0, 0), (0, pad))
+                                        + ((0, 0),) * (r.ndim - 2))
+                        blocks = r[:, :npp * P].reshape(
+                            (r.shape[0], npp, P) + r.shape[2:])
+                        if kvb is not None:
+                            codes, scale = kv_quant_encode(blocks, kvb)
+                            new[kk] = caches[kk].at[:, phys].set(
+                                codes.astype(caches[kk].dtype))
+                            sk = kk + "_scale"
+                            new[sk] = caches[sk].at[:, phys].set(scale)
+                        else:
+                            new[kk] = caches[kk].at[:, phys].set(
+                                blocks.astype(caches[kk].dtype))
+                    for sk in state:
+                        c = caches[sk]
+                        idx = (0, slot) + (0,) * (c.ndim - 2)
+                        new[sk] = jax.lax.dynamic_update_slice(
+                            c, row[sk].astype(c.dtype), idx)
+                    return new
+                return jax.jit(ins, static_argnums=(4,))
+
+            def make_zero_pages(kv):
+                def zero(caches, ids):
+                    new = dict(caches)
+                    for kk in kv:
+                        new[kk] = caches[kk].at[:, ids].set(
+                            jnp.zeros((), caches[kk].dtype))
+                        if kvb is not None:
+                            sk = kk + "_scale"
+                            new[sk] = caches[sk].at[:, ids].set(
+                                jnp.zeros((), caches[sk].dtype))
+                    return new
+                return jax.jit(zero)
+
+            def make_copy_page(kv):
+                def cp(caches, src, dst):
+                    new = dict(caches)
+                    for kk in kv:
+                        new[kk] = caches[kk].at[:, dst].set(caches[kk][:, src])
+                        if kvb is not None:
+                            sk = kk + "_scale"
+                            new[sk] = caches[sk].at[:, dst].set(
+                                caches[sk][:, src])
+                    return new
+                return jax.jit(cp)
+
+            def _decode_paged(params, qparams, caches, tok, pos, pt):
+                logits, caches = lm.decode_step(params, qparams, caches, tok,
+                                                pos, pages=_pages_view(pt))
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return nxt, caches
+
+            def _decode_window_paged(params, qparams, caches, tok, pos, pt,
+                                     k):
+                pages = _pages_view(pt)
+
+                def body(carry, _):
+                    caches, tok, pos = carry
+                    logits, caches = lm.decode_step(params, qparams, caches,
+                                                    tok, pos, pages=pages)
+                    nxt = jnp.argmax(logits[:, -1],
+                                     axis=-1).astype(jnp.int32)
+                    return (caches, nxt[:, None], pos + 1), nxt
+
+                (caches, _, _), toks = jax.lax.scan(
+                    body, (caches, tok, pos), None, length=k)
+                return toks, caches
+
+            self._insert_pages = make_insert_pages(kv_keys, state_keys)
+            self._zero_pages = make_zero_pages(kv_keys)
+            self._copy_page = make_copy_page(kv_keys)
+            self._decode_paged = jax.jit(_decode_paged)
+            self._decode_window_paged = jax.jit(_decode_window_paged,
+                                                static_argnums=(6,))
+
+            if draft is not None:
+                dkv_keys, dstate_keys = _kv_split(self.dcaches)
+                self._insert_pages_d = make_insert_pages(dkv_keys,
+                                                         dstate_keys)
+                self._zero_pages_d = make_zero_pages(dkv_keys)
+                self._copy_page_d = make_copy_page(dkv_keys)
+
+                def make_gather(kv, state):
+                    # materialize each slot's contiguous (max_seq-row)
+                    # arena view from its pages: gather, dequantize if the
+                    # pool holds codes, and SLICE to the logical length —
+                    # the slice keeps the spec step's reductions the exact
+                    # shape the contiguous engine runs, so token identity
+                    # survives the round trip
+                    def gather(caches, pt):
+                        views = {}
+                        for kk in kv:
+                            pages_ = jnp.take(caches[kk], pt, axis=1)
+                            if kvb is not None:
+                                sc = jnp.take(caches[kk + "_scale"], pt,
+                                              axis=1)
+                                pages_ = kv_quant_decode(pages_, sc, kvb)
+                            rows = pages_.reshape(
+                                pages_.shape[:2] + (Lp * P,)
+                                + pages_.shape[4:])
+                            views[kk] = rows[:, :, :max_seq].astype(dt)
+                        for sk in state:
+                            views[sk] = caches[sk]
+                        return views
+                    return gather
+
+                def make_scatter(kv):
+                    # write back only the pages a spec round could have
+                    # touched: rows [pos, pos+k] span at most k//P + 2
+                    # logical pages per slot. Clamped duplicates write
+                    # identical blocks; pages past a slot's allocation
+                    # alias the zero page and receive (exactly) zeros.
+                    def scatter(caches, views, pt, pos, k):
+                        new = dict(caches)
+                        first_lp = pos // P
+                        npg = min(k // P + 2, Lp)
+                        for kk in kv:
+                            view = views[kk]      # (nb, B, max_seq, ...)
+                            pad = Lp * P - view.shape[2]
+                            vp = jnp.pad(view, ((0, 0), (0, 0), (0, pad))
+                                         + ((0, 0),) * (view.ndim - 3))
+                            vB = jnp.moveaxis(vp, 1, 0)   # (B, nb, rows, .)
+                            for j in range(npg):
+                                lp = jnp.clip(first_lp + j, 0, Lp - 1)
+                                phys = jnp.take_along_axis(
+                                    pt, lp[:, None], axis=1)[:, 0]
+                                blk = jax.vmap(
+                                    lambda vb, s: jax.lax.dynamic_slice_in_dim(
+                                        vb, s, P, axis=1))(vB, lp * P)
+                                blk = jnp.moveaxis(blk, 0, 1)
+                                if kvb is not None:
+                                    codes, scale = kv_quant_encode(blk, kvb)
+                                    new[kk] = new[kk].at[:, phys].set(
+                                        codes.astype(new[kk].dtype))
+                                    sk = kk + "_scale"
+                                    new[sk] = new[sk].at[:, phys].set(scale)
+                                else:
+                                    new[kk] = new[kk].at[:, phys].set(
+                                        blk.astype(new[kk].dtype))
+                        return new
+                    return scatter
+
+                tgather = make_gather(kv_keys, state_keys)
+                dgather = make_gather(dkv_keys, dstate_keys)
+                tscatter = make_scatter(kv_keys)
+                dscatter = make_scatter(dkv_keys)
+
+                def _spec_paged(tp, tq, dp, dq, tc, dc, tok, pos, pt, k):
+                    tv = tgather(tc, pt)
+                    dv = dgather(dc, pt)
+                    tgt, ncm, tv, dv = spec_fn(tp, tq, dp, dq, tv, dv,
+                                               tok, pos, k)
+                    tc = tscatter(tc, tv, pt, pos, k)
+                    dc = dscatter(dc, dv, pt, pos, k)
+                    return tgt, ncm, tc, dc
+
+                self._spec_paged = jax.jit(_spec_paged, static_argnums=(9,))
+
     # ------------------------------------------------------------- requests
     def submit(self, prompt, max_new_tokens: int) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
-        if prompt.size + max_new_tokens > self.max_seq:
+        # rows actually written: the prompt occupies [0, S), the first
+        # token comes out of the prefill itself, and the last of the
+        # N-1 decode steps writes row S+N-2 — so a request needs S+N-1
+        # arena rows (checking S+N left one row per slot unusable)
+        if prompt.size + max_new_tokens - 1 > self.max_seq:
             raise ValueError(
-                f"request needs {prompt.size + max_new_tokens} cache slots, "
-                f"arena rows hold {self.max_seq}")
+                f"request needs {prompt.size + max_new_tokens - 1} cache "
+                f"rows, arena rows hold {self.max_seq}")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.paged:
+            need = paging.pages_for_rows(
+                prompt.size + max_new_tokens - 1, self.page_size)
+            if need > self.n_pages - paging.N_RESERVED:
+                raise ValueError(
+                    f"request needs {need} KV pages, pool holds "
+                    f"{self.n_pages - paging.N_RESERVED} allocatable pages")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid=rid, prompt=prompt,
@@ -211,12 +452,27 @@ class Engine:
     def _admit(self) -> int:
         """Prefill queued requests into free slots. Returns #admitted."""
         admitted = 0
+        if self.paged:
+            self._flush_dirty()
+        blocked = False
         for slot in range(self.max_slots):
+            if blocked:
+                break
             # retry the same slot until a request actually occupies it:
             # a one-token request completes at admission and must not
             # leave the slot empty while the queue still has work
             while self.active[slot] is None and self.queue:
                 req = self.queue.popleft()
+                if self.paged:
+                    got = self._admit_paged(req, slot)
+                    if got is None:
+                        # allocator pressure even after dropping prefix
+                        # entries: requeue and wait for an eviction
+                        self.queue.appendleft(req)
+                        blocked = True
+                        break
+                    admitted += int(got)
+                    continue
                 t0 = time.time()
                 nxt, row = self._prefill(self.params, self.qparams,
                                          jnp.asarray(req.prompt)[None])
@@ -235,7 +491,9 @@ class Engine:
                     # the draft arena admits in lockstep: its own one-shot
                     # prefill (at the draft's sliced shapes) into the same
                     # slot, so both arenas agree on position bookkeeping
-                    # from the first speculative round
+                    # from the first speculative round. Its wall time and
+                    # tokens are draft work — they ride their own
+                    # counters, not the target prefill rate's
                     t1 = time.time()
                     drow = self._prefill_draft(self.draft.params,
                                                self.draft.qparams,
@@ -244,7 +502,9 @@ class Engine:
                                                 jnp.int32(slot))
                     jax.block_until_ready(
                         jax.tree_util.tree_leaves(self.dcaches)[0])
-                    self.stats["prefill_s"] += time.time() - t1
+                    self.stats["draft_prefill_s"] += time.time() - t1
+                    self.stats["draft_prefills"] += 1
+                    self.stats["draft_prefill_tokens"] += int(req.prompt.size)
                 self.pos[slot] = req.prompt.size
                 self.last_tok[slot] = first
                 req.slot = slot
@@ -252,9 +512,168 @@ class Engine:
                 admitted += 1
         return admitted
 
+    # ------------------------------------------------------ paged lifecycle
+    def _flush_dirty(self) -> None:
+        """Zero released pages on device and return them to the free list
+        (the allocator's zero-before-reuse contract). Batched into pow2
+        buckets so the compiled-shape set stays bounded; the padding ids
+        hit the reserved zero page, where writing zeros is a no-op."""
+        dirty = self.alloc.take_dirty()
+        if not dirty:
+            return
+        m = 1
+        while m < len(dirty):
+            m *= 2
+        ids = np.full((m,), paging.ZERO_PAGE, np.int32)
+        ids[:len(dirty)] = dirty
+        ids = jnp.asarray(ids)
+        self.caches = self._zero_pages(self.caches, ids)
+        if self.dcaches is not None:
+            self.dcaches = self._zero_pages_d(self.dcaches, ids)
+        self.alloc.mark_zeroed(dirty)
+
+    def _reserve_pages(self, n: int, keep_last: bool = False) -> bool:
+        """Make n pages allocatable, dropping LRU prefix-cache entries
+        under pressure. `keep_last` protects the most-recently-used entry
+        (the hit being admitted against)."""
+        floor = 1 if keep_last else 0
+        while not self.alloc.can_alloc(n):
+            if self.prefix_cache is None or len(self.prefix_cache) <= floor:
+                return False
+            self.prefix_cache.drop_lru()
+            self._flush_dirty()
+        return True
+
+    def _admit_paged(self, req: Request, slot: int) -> Optional[bool]:
+        """Admit one request into `slot` under the paged arena. Returns
+        True (occupies the slot), False (finished at admission — retry
+        the slot), or None (allocator pressure — requeue)."""
+        P = self.page_size
+        S = int(req.prompt.size)
+        npg_req = paging.pages_for_rows(S + req.max_new_tokens - 1, P)
+        n_full = S // P              # pages fully covered by prompt rows
+        partial = S % P != 0
+        cache = self.prefix_cache
+        ent = cache.lookup(req.prompt) if cache is not None else None
+
+        if req.max_new_tokens == 1:
+            # one-token request: the answer is the (possibly memoized)
+            # prefill argmax — no pages, no slot
+            if ent is not None:
+                first = int(ent.first_token)
+                self.stats["prefix_hits"] += 1
+            else:
+                t0 = time.time()
+                nxt, _ = self._prefill(self.params, self.qparams,
+                                       jnp.asarray(req.prompt)[None])
+                first = int(jax.block_until_ready(nxt)[0])
+                self.stats["prefill_s"] += time.time() - t0
+                self.stats["prefills"] += 1
+                self.stats["prefill_tokens"] += S
+            self.stats["admitted"] += 1
+            req.admit_t = time.time()
+            req.tokens.append(first)
+            self._finish(req)
+            return False
+
+        if ent is not None:
+            # prefix hit: share the full prompt pages in place (one more
+            # refcount), CoW-copy the pristine tail template into an
+            # owned page, reuse the memoized first token — and skip both
+            # prefill dispatches entirely
+            n_owned = npg_req - n_full
+            if not self._reserve_pages(n_owned, keep_last=True):
+                return None
+            owned = self.alloc.alloc(n_owned)
+            self.alloc.retain(ent.full_pages)
+            pages = list(ent.full_pages) + owned
+            if partial:
+                src = jnp.int32(ent.tail_page)
+                dst = jnp.int32(owned[0])
+                self.caches = self._copy_page(self.caches, src, dst)
+                if self.dcaches is not None:
+                    self.dcaches = self._copy_page_d(self.dcaches, src, dst)
+            first = int(ent.first_token)
+            self.stats["prefix_hits"] += 1
+        else:
+            if not self._reserve_pages(npg_req):
+                return None
+            pages = self.alloc.alloc(npg_req)
+            npp = paging.pages_for_rows(S, P)    # pages the prompt covers
+            t0 = time.time()
+            nxt, row = self._prefill(self.params, self.qparams,
+                                     jnp.asarray(req.prompt)[None])
+            first = int(jax.block_until_ready(nxt)[0])
+            self.stats["prefill_s"] += time.time() - t0
+            self.stats["prefills"] += 1
+            self.stats["prefill_tokens"] += S
+            phys = jnp.asarray(np.asarray(pages[:npp], np.int32))
+            self.caches = self._insert_pages(self.caches, row,
+                                             jnp.int32(slot), phys, npp)
+            if self.draft is not None:
+                t1 = time.time()
+                drow = self._prefill_draft(self.draft.params,
+                                           self.draft.qparams,
+                                           jnp.asarray(req.prompt)[None])
+                self.dcaches = self._insert_pages_d(self.dcaches, drow,
+                                                    jnp.int32(slot), phys,
+                                                    npp)
+                jax.block_until_ready(
+                    jax.tree_util.tree_leaves(self.dcaches)[0])
+                self.stats["draft_prefill_s"] += time.time() - t1
+                self.stats["draft_prefills"] += 1
+                self.stats["draft_prefill_tokens"] += S
+            if cache is not None:
+                # register the prompt for sharing (best effort): the
+                # cache takes its own refcount on the full pages and a
+                # pristine device copy of the partial tail page — copied
+                # *now*, before this owner's first decode write lands in
+                # it. Sharing is whole-prompt-hash keyed: prefix K/V rows
+                # are not bitwise stable across prefills of different
+                # total lengths, identical prompts are (paging.py).
+                tmpl = None
+                if partial and self.alloc.can_alloc(1):
+                    tmpl = self.alloc.alloc(1)[0]
+                    src = jnp.int32(pages[n_full])
+                    self.caches = self._copy_page(self.caches, src,
+                                                  jnp.int32(tmpl))
+                    if self.dcaches is not None:
+                        self.dcaches = self._copy_page_d(self.dcaches, src,
+                                                         jnp.int32(tmpl))
+                if (n_full or tmpl is not None) and not (partial
+                                                         and tmpl is None):
+                    self.alloc.retain(pages[:n_full])
+                    cache.insert(paging.PrefixEntry(
+                        key=paging.prompt_key(req.prompt), prompt_len=S,
+                        full_pages=tuple(pages[:n_full]), tail_page=tmpl,
+                        first_token=first))
+
+        pt_row = np.full((self.Lp,), paging.ZERO_PAGE, np.int32)
+        pt_row[:len(pages)] = pages
+        self.page_table[slot] = pt_row
+        self.slot_pages[slot] = list(pages)
+        self.pos[slot] = S
+        self.last_tok[slot] = first
+        self.stats["admitted"] += 1
+        req.admit_t = time.time()
+        req.tokens.append(first)
+        req.slot = slot
+        self.active[slot] = req
+        return True
+
     def _finish(self, req: Request) -> None:
         req.finish_t = time.time()
         if req.slot >= 0:
+            if self.paged:
+                # eviction is a page release: refcounts drop, pages whose
+                # last owner left go to the dirty quarantine (zeroed at
+                # the next admission / drain), and the slot's table rows
+                # point back at the trash page so its idle decode writes
+                # can't touch live pages
+                self.alloc.release(self.slot_pages[req.slot])
+                self.slot_pages[req.slot] = []
+                self.page_table[req.slot, :] = paging.TRASH_PAGE
+                self.pos[req.slot] = 0
             self.active[req.slot] = None
             req.slot = -1
             self.stats["evicted"] += 1
@@ -273,8 +692,13 @@ class Engine:
         tok = jnp.asarray(self.last_tok)[:, None]
         pos = jnp.asarray(self.pos)
         t0 = time.time()
-        nxt, self.caches = self._decode(self.params, self.qparams,
-                                        self.caches, tok, pos)
+        if self.paged:
+            nxt, self.caches = self._decode_paged(
+                self.params, self.qparams, self.caches, tok, pos,
+                jnp.asarray(self.page_table))
+        else:
+            nxt, self.caches = self._decode(self.params, self.qparams,
+                                            self.caches, tok, pos)
         nxt = np.asarray(jax.block_until_ready(nxt))
         self.stats["decode_s"] += time.time() - t0
         self.stats["decode_steps"] += 1
@@ -320,9 +744,15 @@ class Engine:
         tok = jnp.asarray(self.last_tok)[:, None]
         pos = jnp.asarray(self.pos)
         t0 = time.time()
-        tgt, ncm, self.caches, self.dcaches = self._spec(
-            self.params, self.qparams, self.draft.params,
-            self.draft.qparams, self.caches, self.dcaches, tok, pos, k)
+        if self.paged:
+            tgt, ncm, self.caches, self.dcaches = self._spec_paged(
+                self.params, self.qparams, self.draft.params,
+                self.draft.qparams, self.caches, self.dcaches, tok, pos,
+                jnp.asarray(self.page_table), k)
+        else:
+            tgt, ncm, self.caches, self.dcaches = self._spec(
+                self.params, self.qparams, self.draft.params,
+                self.draft.qparams, self.caches, self.dcaches, tok, pos, k)
         tgt = np.asarray(jax.block_until_ready(tgt))
         ncm = np.asarray(ncm)
         self.stats["decode_s"] += time.time() - t0
@@ -361,18 +791,30 @@ class Engine:
         prefills — so the compiled-shape set stays bounded either way."""
         tok = jnp.zeros((self.max_slots, 1), jnp.int32)
         pos = jnp.zeros((self.max_slots,), jnp.int32)
+        pt = jnp.asarray(self.page_table) if self.paged else None
         if self.draft is not None:
             for k in self._spec_ks():
-                tgt, _, _, _ = self._spec(
-                    self.params, self.qparams, self.draft.params,
-                    self.draft.qparams, self.caches, self.dcaches,
-                    tok, pos, k)
+                if self.paged:
+                    tgt, _, _, _ = self._spec_paged(
+                        self.params, self.qparams, self.draft.params,
+                        self.draft.qparams, self.caches, self.dcaches,
+                        tok, pos, pt, k)
+                else:
+                    tgt, _, _, _ = self._spec(
+                        self.params, self.qparams, self.draft.params,
+                        self.draft.qparams, self.caches, self.dcaches,
+                        tok, pos, k)
                 jax.block_until_ready(tgt)
         else:
             k = 1
             while k <= self.MAX_WINDOW:
-                toks, _ = self._decode_window(self.params, self.qparams,
-                                              self.caches, tok, pos, k)
+                if self.paged:
+                    toks, _ = self._decode_window_paged(
+                        self.params, self.qparams, self.caches, tok, pos,
+                        pt, k)
+                else:
+                    toks, _ = self._decode_window(self.params, self.qparams,
+                                                  self.caches, tok, pos, k)
                 jax.block_until_ready(toks)
                 k *= 2
         # prefill compiles per distinct prompt length; the queued lengths
@@ -412,8 +854,13 @@ class Engine:
         tok = jnp.asarray(self.last_tok)[:, None]
         pos = jnp.asarray(self.pos)
         t0 = time.time()
-        toks, self.caches = self._decode_window(
-            self.params, self.qparams, self.caches, tok, pos, k)
+        if self.paged:
+            toks, self.caches = self._decode_window_paged(
+                self.params, self.qparams, self.caches, tok, pos,
+                jnp.asarray(self.page_table), k)
+        else:
+            toks, self.caches = self._decode_window(
+                self.params, self.qparams, self.caches, tok, pos, k)
         toks = np.asarray(jax.block_until_ready(toks))   # (k, slots)
         self.stats["decode_s"] += time.time() - t0
         self.stats["decode_steps"] += k
@@ -440,6 +887,10 @@ class Engine:
         while self.pending:
             if not drive() and self.queue:
                 raise RuntimeError("queue stuck with no active slots")
+        if self.paged:
+            # drain leaves no dirty quarantine behind: every released
+            # page is zeroed and back on the free list
+            self._flush_dirty()
         out = {rid: np.asarray(req.tokens, np.int32)
                for rid, req in sorted(self.done.items())}
         self.done.clear()
@@ -464,11 +915,45 @@ class Engine:
         return out
 
     def kv_bytes(self) -> int:
-        """Bytes the slot arena pins in HBM. A pruned model's arena only
+        """KV bytes the engine is *using*. A pruned model's arena only
         holds rows for surviving kv heads / mamba channels / rwkv heads
         (LM.init_cache sizes from the SlimPlan shapes), so this shrinks
-        with realized sparsity."""
-        return tree_bytes(self.caches)
+        with realized sparsity. A speculative engine's draft arena counts
+        too — it is pinned HBM the serve needs, and excluding it
+        under-reported every `--speculative` kv_bytes stat. Paged engines
+        count only *allocated* pages (live + reserved) pro-rated over the
+        pooled leaves, plus state leaves and the page table — the headline
+        stat the ≥2x-concurrency bench leans on."""
+        if not self.paged:
+            total = tree_bytes(self.caches)
+            if self.dcaches is not None:
+                total += tree_bytes(self.dcaches)
+            return total
+        n_alloc = self.alloc.n_live + paging.N_RESERVED
+        total = self.page_table.nbytes
+        arenas = [self.caches]
+        if self.dcaches is not None:
+            arenas.append(self.dcaches)
+        for caches in arenas:
+            for key, leaf in caches.items():
+                if (key.endswith(".k") or key.endswith(".v")
+                        or key.endswith("_scale")):
+                    total += (leaf.nbytes // self.n_pages) * n_alloc
+                else:
+                    total += leaf.nbytes    # mamba/rwkv state: slot-sized
+        return total
+
+    def kv_pool_bytes(self) -> int:
+        """KV bytes the engine *pins* in HBM regardless of load: the full
+        pool(s) plus the page table. For a contiguous engine this equals
+        kv_bytes(); for a paged engine it is the fixed budget that
+        kv_bytes() draws against."""
+        total = tree_bytes(self.caches)
+        if self.dcaches is not None:
+            total += tree_bytes(self.dcaches)
+        if self.paged:
+            total += self.page_table.nbytes
+        return total
 
     def param_bytes(self) -> int:
         """Bytes of the served param dict (codes + scales + dense rest).
@@ -487,7 +972,10 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
                  max_slots: int = 4, max_seq: int = 64, seed: int = 0,
                  verbose: bool = False, speculative: bool = False,
                  draft_k: int = 4, draft_sparsity: float = 0.5,
-                 draft_bits: float = 2.0) -> tuple[Engine, LM]:
+                 draft_bits: float = 2.0, paged: bool = False,
+                 page_size: int = 16, kv_bits: int | None = None,
+                 n_pages: int | None = None,
+                 prefix_sharing: bool = True) -> tuple[Engine, LM]:
     """Init an LM at `arch` scale and wrap it in an Engine.
 
     `pruned` serves the physically sliced subnet: `prepare_serving` builds
@@ -526,8 +1014,17 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
         packed=packed, bits_init=bits_init, keep_masks=keep_masks,
         prune_sparsity=(sparsity if pruned and keep_masks is None else None))
     eng = Engine(lm, params, qparams, max_slots=max_slots, max_seq=max_seq,
-                 draft=draft, draft_k=draft_k)
+                 draft=draft, draft_k=draft_k, paged=paged,
+                 page_size=page_size, kv_bits=kv_bits, n_pages=n_pages,
+                 prefix_sharing=prefix_sharing)
     meta["kv_bytes"] = eng.kv_bytes()
+    if paged:
+        meta["paged"] = {
+            "page_size": int(eng.page_size),
+            "n_pages": int(eng.n_pages),
+            "kv_bits": eng.kv_bits,
+            "kv_pool_bytes": eng.kv_pool_bytes(),
+        }
     meta["decode_attn"] = model_layers.decode_attn_enabled()
     if draft is not None:
         meta["speculative"] = {
@@ -583,6 +1080,8 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
                  decode_attn: bool | None = None,
                  speculative: bool = False, draft_k: int = 4,
                  draft_sparsity: float = 0.5, draft_bits: float = 2.0,
+                 paged: bool = False, page_size: int = 16,
+                 kv_bits: int | None = None,
                  stats: dict | None = None) -> dict[int, np.ndarray]:
     """Submit one request per prompt length, run to drain, report tok/s.
 
@@ -600,14 +1099,16 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
                                max_seq=max_seq, seed=seed, verbose=verbose,
                                speculative=speculative, draft_k=draft_k,
                                draft_sparsity=draft_sparsity,
-                               draft_bits=draft_bits)
+                               draft_bits=draft_bits, paged=paged,
+                               page_size=page_size, kv_bits=kv_bits)
         for p in synthetic_prompts(lm.cfg, prompt_lens, seed):
             eng.submit(p, gen)
         eng.warmup()
         out = eng.run()
     if stats is not None:
         stats.update(eng.stats, **eng.throughput(),
-                     param_bytes=eng.param_bytes(), kv_bytes=eng.kv_bytes())
+                     param_bytes=eng.param_bytes(), kv_bytes=eng.kv_bytes(),
+                     kv_pool_bytes=eng.kv_pool_bytes())
     if verbose:
         th = eng.throughput()
         mode = "compressed" if (compressed or packed) else "dense"
@@ -620,6 +1121,10 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
             mode += (f"+spec(k={sm.get('draft_k', draft_k)}, draft "
                      f"s{100 * sm.get('draft_sparsity', 0.0):.0f}/"
                      f"b{sm.get('draft_bits', draft_bits):.0f})")
+        if paged:
+            mode += "+paged"
+            if kv_bits is not None:
+                mode += f"@kv{kv_bits}"
         line = (f"{arch} [engine/{mode}]: {len(prompt_lens)} requests "
                 f"({', '.join(str(n) for n in prompt_lens)} prompt tokens, "
                 f"{gen} new each) on {max_slots} slots — "

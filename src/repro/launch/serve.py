@@ -291,6 +291,58 @@ def speculative_parity_check(arch: str, smoke: bool,
     return got
 
 
+def paged_parity_check(arch: str, smoke: bool, prompt_lens: list[int],
+                       gen: int, *, quantized: bool = True,
+                       compressed: bool = False, packed: bool = False,
+                       pruned: bool = False, sparsity: float = 0.5,
+                       bits_init: float = 8.0, speculative: bool = False,
+                       draft_k: int = 4, draft_sparsity: float = 0.5,
+                       draft_bits: float = 2.0, page_size: int = 16,
+                       max_slots: int, seed: int = 0,
+                       verbose: bool = True) -> dict:
+    """Assert the paged engine's decode is token-identical to the
+    contiguous-arena engine on the same weights/prompts/seed.
+
+    The paged arena changes only *where* KV rows live (page pools behind
+    per-slot page tables, prefix-shared pages, zero-page backing) — every
+    gathered view is sliced back to the exact max_seq row count the
+    contiguous engine reduces over, and prefix sharing only ever reuses
+    bitwise-identical whole-prompt pages, so greedy tokens must match
+    bit-for-bit. Stacks with --pruned/--packed/--speculative (the page
+    pools take the sliced KV shapes; the draft arena pages through the
+    same tables). Raises AssertionError on divergence — the CI smoke for
+    `serve --paged --smoke`. Returns the paged arm's output (the run
+    that printed the throughput report)."""
+    import numpy as np
+
+    from repro.launch.engine import engine_serve
+    common = dict(quantized=quantized, compressed=compressed, packed=packed,
+                  pruned=pruned, sparsity=sparsity, bits_init=bits_init,
+                  speculative=speculative, draft_k=draft_k,
+                  draft_sparsity=draft_sparsity, draft_bits=draft_bits,
+                  max_slots=max_slots, seed=seed)
+    want = engine_serve(arch, smoke, prompt_lens, gen, verbose=False,
+                        **common)
+    got = engine_serve(arch, smoke, prompt_lens, gen, verbose=verbose,
+                       paged=True, page_size=page_size, **common)
+    assert sorted(got) == sorted(want), (sorted(got), sorted(want))
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"paged decode diverged from the contiguous arena "
+                    f"(request {rid})")
+    mode = ("packed" if packed else
+            "compressed" if compressed else "dense")
+    if pruned:
+        mode += f"+pruned@{sparsity:.2f}"
+    if speculative:
+        mode += f"+spec(k={draft_k})"
+    print(f"{arch}: paged KV decode (page_size={page_size}) "
+          f"token-identical to the contiguous arena over {len(want)} "
+          f"requests ({mode})")
+    return got
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -353,6 +405,23 @@ def main():
     ap.add_argument("--draft-bits", type=float, default=2.0,
                     help="speculative mode: draft quantizer init width "
                          "(packed storage bits)")
+    ap.add_argument("--paged", action="store_true", default=False,
+                    help="engine mode: paged KV arena — fixed-size KV "
+                         "pages in one pool behind per-slot page tables, "
+                         "with whole-prompt prefix sharing (repeated "
+                         "prompts share refcounted pages and skip their "
+                         "prefill); in --smoke mode also asserts decode "
+                         "tokens are identical to the contiguous arena "
+                         "(DESIGN.md §4.11)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged mode: KV rows per page (multiple of 8)")
+    ap.add_argument("--kv-bits", type=int, default=None,
+                    choices=[4, 8],
+                    help="paged mode: quantize the page store to int8 or "
+                         "nibble-packed int4 codes + per-row scales, "
+                         "decoded in-VMEM by the flash-decode kernel "
+                         "(approximate numerics: skips the --smoke "
+                         "token-identity check)")
     ap.add_argument("--no-decode-attn", dest="decode_attn",
                     action="store_false", default=True,
                     help="disable the fused flash-decode attention kernel "
@@ -387,9 +456,30 @@ def main():
         lens = [int(x) for x in args.prompt_lens.split(",")]
     else:
         lens = [args.prompt_len] * args.batch
+    # --kv-bits quantizes the *paged* page store; asking for it implies
+    # the paged arena rather than erroring on a flag the user clearly
+    # wanted to take effect
+    if args.kv_bits is not None:
+        args.paged = True
     # `--draft-sparsity 50` and `--draft-sparsity 0.5` mean the same thing
     draft_sparsity = (args.draft_sparsity / 100.0
                       if args.draft_sparsity > 1.0 else args.draft_sparsity)
+    if args.paged and args.smoke and args.kv_bits is None:
+        # CI smoke contract: paged decode == contiguous decode, token for
+        # token, across whatever compression/speculative stack is active.
+        # Quantized pages (--kv-bits) are deliberately lossy, so they
+        # serve without the identity assertion.
+        paged_parity_check(args.arch, args.smoke, lens, args.gen,
+                           quantized=args.quantized,
+                           compressed=args.compressed, packed=args.packed,
+                           pruned=args.pruned, sparsity=args.sparsity,
+                           bits_init=args.bits,
+                           speculative=args.speculative,
+                           draft_k=args.draft_k,
+                           draft_sparsity=draft_sparsity,
+                           draft_bits=args.draft_bits,
+                           page_size=args.page_size, max_slots=args.slots)
+        return
     if args.speculative and args.smoke:
         # CI smoke contract: speculative decode == non-speculative decode,
         # token for token (the draft only sets speed). The speculative arm
@@ -439,7 +529,8 @@ def main():
                  sparsity=args.sparsity, bits_init=args.bits,
                  max_slots=args.slots, speculative=args.speculative,
                  draft_k=args.draft_k, draft_sparsity=draft_sparsity,
-                 draft_bits=args.draft_bits)
+                 draft_bits=args.draft_bits, paged=args.paged,
+                 page_size=args.page_size, kv_bits=args.kv_bits)
 
 
 if __name__ == "__main__":

@@ -130,6 +130,23 @@ def use_decode_attn(enabled: bool):
 DECODE_SCORE_SHARDING = None
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedView:
+    """How one decode step addresses the paged KV pool (DESIGN.md §4.11).
+
+    `table` is the (B, Lp) logical->physical page map (traced; rebuilt
+    inside each jitted step from the engine's host table). The rest is
+    static geometry: `page_size` rows per page, `seq_len` the *logical*
+    arena length — attention masks/slices to exactly this many rows so
+    an unquantized paged decode is bitwise the contiguous arena's —
+    and `kv_bits` (None | 8 | 4) selecting the quantized page store.
+    """
+    table: jax.Array
+    page_size: int
+    seq_len: int
+    kv_bits: Optional[int] = None
+
+
 def _dt(cfg: ModelConfig) -> Dtype:
     return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
 
@@ -393,13 +410,18 @@ def init_attention(key, cfg: ModelConfig, prefix: str, n_layers: int,
 def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
                rope: tuple, window: int = 0, prefix: str,
                cache: Optional[tuple] = None, q_offset: int = 0,
-               shapes: Optional[LayerShapes] = None, chunked: bool = False):
+               shapes: Optional[LayerShapes] = None, chunked: bool = False,
+               pages: Optional[PagedView] = None):
     """lp: per-layer (unstacked) params view. cache: (k_cache, v_cache,
     write_pos) for decode. `shapes` carries this sublayer's physical dims
     (pruned subnets run fewer heads than the config states); default is
     the dense config. `chunked` scores an S-token chunk mid-sequence
     against the live cache (the speculative verify pass) instead of
-    treating S > 1 as a from-scratch prefill. Returns (out, new_cache)."""
+    treating S > 1 as a from-scratch prefill. With `pages`, the decode
+    branch treats the cache k/v as paged *pools* ((n_pages, P, KVh, dh*)
+    + optional per-row scale planes appended to the cache tuple) and
+    scatter-writes / page-gathers through the view's table instead of
+    row-indexing a per-slot arena. Returns (out, new_cache)."""
     B, S, D = x.shape
     shapes = shapes or LayerShapes.from_config(cfg)
     H, KVh, dh = shapes.n_heads, shapes.n_kv_heads, shapes.d_head
@@ -464,6 +486,52 @@ def attn_apply(lp: dict, qp: Optional[dict], cfg: ModelConfig, x, *,
         out = out.reshape(B, S, H * dh)
         out = qa(out, qp, f"{prefix}.attn_out.aq")
         return dense_proj(out, lp, qp, f"{prefix}.wo"), (ck, cv, pos + S)
+    if cache is not None and pages is not None:
+        # paged decode: the cache tuple holds shared *pools* — scatter the
+        # token's K/V row at its slot's physical row (page_table[pos // P]
+        # * P + pos % P) and attend through the page-indirect kernel.
+        # Idle slots' tables point every logical page at the reserved
+        # trash page, so their (discarded) writes can't touch live pages.
+        if window > 0:
+            raise ValueError(
+                f"{prefix}: the paged arena needs full (non-ring) caches; "
+                f"window={window} layers ring-wrap rows")
+        if len(cache) == 5:
+            ck, cv, pos, ksc, vsc = cache
+        else:
+            (ck, cv, pos), ksc, vsc = cache, None, None
+        P = pages.page_size
+        n_pages = ck.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+        phys = jnp.take_along_axis(pages.table, (pos // P)[:, None],
+                                   axis=1)[:, 0] * P + pos % P      # (B,)
+        rowk, rowv = k[:, 0], v[:, 0]                     # (B, KVh, dh)
+        if pages.kv_bits is not None:
+            from repro.core.quant import kv_quant_encode
+            rowk, rsk = kv_quant_encode(rowk, pages.kv_bits)
+            rowv, rsv = kv_quant_encode(rowv, pages.kv_bits)
+            ksc = ksc.reshape(n_pages * P, KVh).at[phys].set(rsk).reshape(
+                ksc.shape)
+            vsc = vsc.reshape(n_pages * P, KVh).at[phys].set(rsv).reshape(
+                vsc.shape)
+        flat = (n_pages * P,) + ck.shape[2:]
+        ck = ck.reshape(flat).at[phys].set(rowk.astype(ck.dtype)).reshape(
+            ck.shape)
+        cv = cv.reshape(flat).at[phys].set(rowv.astype(cv.dtype)).reshape(
+            cv.shape)
+        g = H // KVh
+        use_kernel = (_DECODE_ATTN["enabled"] and _KERNEL_DISPATCH["enabled"]
+                      and DECODE_SCORE_SHARDING is None)
+        out = Kops.paged_decode_attn_op(
+            q.reshape(B, KVh, g, dh), ck, cv, pos, pages.table,
+            page_size=P, seq_len=pages.seq_len, kv_bits=pages.kv_bits,
+            k_scale=ksc, v_scale=vsc, window=window,
+            backend=(None if use_kernel else "xla-ref"))
+        out = out.reshape(B, 1, H, dh).astype(x.dtype)
+        out = out.reshape(B, S, H * dh)
+        out = qa(out, qp, f"{prefix}.attn_out.aq")
+        new_cache = (ck, cv, pos + 1, ksc, vsc)
+        return dense_proj(out, lp, qp, f"{prefix}.wo"), new_cache
     if cache is not None:
         ck, cv, pos = cache
         # decode: append the new token at `pos` (ring for windowed layers).

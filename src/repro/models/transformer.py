@@ -438,11 +438,76 @@ class LM:
                                                       jnp.float32)
         return caches
 
+    def init_paged_cache(self, batch: int, n_pages: int, page_size: int,
+                         dtype=jnp.bfloat16, kv_bits: Optional[int] = None):
+        """Paged decode arena: attention K/V become *pools* of
+        (nb, n_pages, page_size, KVh, dh) pages shared by every slot and
+        addressed through per-slot page tables (`Lyr.PagedView`), so HBM
+        scales with written rows, not slots × max_seq. With `kv_bits`
+        (8 | 4) the pools hold int8 codes (nibble pairs halve the byte
+        width at 4) plus per-row f32 scale planes `<pre>.k_scale` /
+        `<pre>.v_scale`, decoded in-kernel at read time. Recurrent state
+        (mamba / rwkv) is O(1) per slot and stays a contiguous (nb,
+        batch, ...) arena — only attention rows page. `batch` sizes those
+        state leaves (= max_slots)."""
+        cfg = self.cfg
+        if cfg.window > 0:
+            raise ValueError("paged KV arena needs full (non-ring) caches; "
+                             f"window={cfg.window}")
+        if kv_bits is not None:
+            from repro.core.quant import KV_STORAGE_BITS
+            if kv_bits not in KV_STORAGE_BITS:
+                raise ValueError(f"kv_bits must be in {KV_STORAGE_BITS}, "
+                                 f"got {kv_bits}")
+        caches = {}
+        for sub, shp in zip(self.plan, self.shapes):
+            pre = f"blocks.{sub.j}"
+            nb = self.n_blocks
+            if sub.mixer == "attn":
+                KVh, dh = shp.n_kv_heads, shp.d_head
+                if kv_bits is None:
+                    z = jnp.zeros((nb, n_pages, page_size, KVh, dh), dtype)
+                    caches[f"{pre}.k"] = z
+                    caches[f"{pre}.v"] = z
+                else:
+                    if kv_bits == 4 and dh % 2:
+                        raise ValueError(f"kv_bits=4 packs code pairs; "
+                                         f"d_head={dh} must be even")
+                    dhs = dh // 2 if kv_bits == 4 else dh
+                    zc = jnp.zeros((nb, n_pages, page_size, KVh, dhs),
+                                   jnp.int8)
+                    zs = jnp.zeros((nb, n_pages, page_size, KVh),
+                                   jnp.float32)
+                    caches[f"{pre}.k"] = zc
+                    caches[f"{pre}.v"] = zc
+                    caches[f"{pre}.k_scale"] = zs
+                    caches[f"{pre}.v_scale"] = zs
+            elif sub.mixer == "mamba":
+                Di = shp.mamba_inner
+                caches[f"{pre}.h"] = jnp.zeros(
+                    (nb, batch, Di, cfg.mamba.d_state), jnp.float32)
+                caches[f"{pre}.conv"] = jnp.zeros(
+                    (nb, batch, cfg.mamba.d_conv - 1, Di), dtype)
+            else:  # rwkv
+                D = shp.d_model
+                H = shp.rwkv_heads
+                dh = cfg.rwkv.head_size
+                caches[f"{pre}.tm_shift"] = jnp.zeros((nb, batch, D),
+                                                      jnp.float32)
+                caches[f"{pre}.wkv"] = jnp.zeros((nb, batch, H, dh, dh),
+                                                 jnp.float32)
+                caches[f"{pre}.cm_shift"] = jnp.zeros((nb, batch, D),
+                                                      jnp.float32)
+        return caches
+
     def decode_step(self, params: dict, qparams: Optional[dict], caches: dict,
-                    token, pos):
+                    token, pos, pages=None):
         """One-token decode. token: (B, 1[, n_codebooks]); pos: scalar
         (static batching, every sequence in lockstep) or (B,) int vector
         (continuous batching: each slot at its own absolute position).
+        `pages` (a `Lyr.PagedView`) switches attention caches to the
+        paged pools of `init_paged_cache` — the view's table indirects
+        every K/V write and read; recurrent state is untouched.
         Returns (logits, new_caches)."""
         cfg = self.cfg
         params, qp_body = self._prequantize(params, qparams)
@@ -463,7 +528,19 @@ class LM:
             for sub, shp in zip(self.plan, self.shapes):
                 pre = f"blocks.{sub.j}"
                 h = Lyr.rmsnorm(x, lp[f"{pre}.norm1"], cfg.norm_eps)
-                if sub.mixer == "attn":
+                if sub.mixer == "attn" and pages is not None:
+                    cache = (cc[f"{pre}.k"], cc[f"{pre}.v"], pos)
+                    if pages.kv_bits is not None:
+                        cache += (cc[f"{pre}.k_scale"], cc[f"{pre}.v_scale"])
+                    mix, nc = Lyr.attn_apply(
+                        lp, qp_body, cfg, h, rope=rope, window=cfg.window,
+                        prefix=f"{pre}.attn", shapes=shp, cache=cache,
+                        pages=pages)
+                    new_c[f"{pre}.k"], new_c[f"{pre}.v"], _, nks, nvs = nc
+                    if pages.kv_bits is not None:
+                        new_c[f"{pre}.k_scale"] = nks
+                        new_c[f"{pre}.v_scale"] = nvs
+                elif sub.mixer == "attn":
                     mix, nc = Lyr.attn_apply(
                         lp, qp_body, cfg, h, rope=rope, window=cfg.window,
                         prefix=f"{pre}.attn", shapes=shp,

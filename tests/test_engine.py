@@ -164,7 +164,7 @@ def test_engine_admission_guards():
     lm, params, qparams = _serving_lm()
     eng = Engine(lm, params, qparams, max_slots=2, max_seq=8)
     with pytest.raises(ValueError):
-        eng.submit(np.arange(6), 4)     # 6 + 4 > 8
+        eng.submit(np.arange(6), 4)     # needs 6 + 4 - 1 = 9 rows > 8
     with pytest.raises(ValueError):
         eng.submit(np.arange(3), 0)
     with pytest.raises(ValueError):
@@ -174,6 +174,32 @@ def test_engine_admission_guards():
     out = eng.run()
     assert len(out[rid]) == 1
     assert eng.stats["decode_steps"] == 0
+
+
+def test_engine_admits_exact_capacity_request():
+    """A request needing exactly max_seq cache rows must be admitted: S
+    prompt rows plus N-1 decode writes touch rows [0, S+N-1) — the first
+    generated token comes from the prefill and writes nothing. The old
+    `S + N > max_seq` guard rejected this boundary request (off-by-one),
+    silently shrinking every engine's usable budget by one token."""
+    lm, params, qparams = _serving_lm()
+    prompts = synthetic_prompts(lm.cfg, [5])
+    eng = Engine(lm, params, qparams, max_slots=1, max_seq=8)
+    rid = eng.submit(prompts[0], 4)     # rows needed: 5 + 4 - 1 = 8 == 8
+    out = eng.run()
+    assert len(out[rid]) == 4
+    # and the boundary decode is trustworthy: identical to a roomy arena
+    big = Engine(lm, params, qparams, max_slots=1, max_seq=16)
+    brid = big.submit(prompts[0], 4)
+    np.testing.assert_array_equal(out[rid], big.run()[brid])
+
+
+def test_engine_admission_guards_one_past_capacity():
+    lm, params, qparams = _serving_lm()
+    prompts = synthetic_prompts(lm.cfg, [5])
+    eng = Engine(lm, params, qparams, max_slots=1, max_seq=8)
+    with pytest.raises(ValueError):
+        eng.submit(prompts[0], 5)       # 5 + 5 - 1 = 9 rows > 8
 
 
 def test_run_drains_only_new_completions():
@@ -187,6 +213,53 @@ def test_run_drains_only_new_completions():
     r1 = eng.submit(prompts[1], 3)
     assert set(eng.run()) == {r1}
     assert not eng.done
+
+
+def test_draft_prefill_time_rides_its_own_counters(monkeypatch):
+    """The draft arena's admission prefill is draft work: its wall time
+    and token count must land in draft_prefill_* — folding it into
+    prefill_s (as it used to) inflated the target prefill denominator
+    and corrupted prefill_tok_per_s for every speculative serve. A fake
+    clock that ticks 1.0 per time() call makes every timed block weigh
+    exactly 1.0, so the split is assertable without real timing."""
+    import itertools
+    import types
+
+    import repro.launch.engine as engine_mod
+    eng, lm = build_engine(ARCH, True, speculative=True, draft_k=2,
+                           max_slots=2, max_seq=16)
+    prompts = synthetic_prompts(lm.cfg, [5, 7])
+    for p in prompts:
+        eng.submit(p, 4)
+    eng.warmup()
+    ticks = itertools.count()
+    monkeypatch.setattr(engine_mod, "time",
+                        types.SimpleNamespace(
+                            time=lambda: float(next(ticks))))
+    eng.run()
+    s = eng.stats
+    assert s["prefills"] == 2 and s["prefill_tokens"] == 12
+    assert s["draft_prefills"] == 2 and s["draft_prefill_tokens"] == 12
+    # one timed block each per admission — target and draft prefill time
+    # no longer pool into one counter
+    assert s["prefill_s"] == pytest.approx(2.0)
+    assert s["draft_prefill_s"] == pytest.approx(2.0)
+
+
+def test_kv_bytes_counts_both_arenas():
+    """kv_bytes() is the headline 'KV HBM this serve pins' stat: a
+    speculative engine's draft arena is pinned HBM too, so excluding it
+    (the old behavior) under-reported every --speculative serve."""
+    from repro.core.subnet import tree_bytes
+    eng, _ = build_engine(ARCH, True, speculative=True, max_slots=2,
+                          max_seq=16)
+    t, d = tree_bytes(eng.caches), tree_bytes(eng.dcaches)
+    assert d > 0
+    assert eng.kv_bytes() == t + d
+    assert eng.serving_meta["kv_bytes"] == eng.kv_bytes()
+    assert eng.kv_pool_bytes() == eng.kv_bytes()   # contiguous: no pool gap
+    non, _ = build_engine(ARCH, True, max_slots=2, max_seq=16)
+    assert non.kv_bytes() == tree_bytes(non.caches)
 
 
 def test_one_token_request_does_not_stall_the_queue():

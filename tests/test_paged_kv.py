@@ -1,0 +1,313 @@
+"""Paged + quantized KV arena (DESIGN.md §4.11).
+
+Three tiers, matching how the arena is layered:
+
+  kernel   — `paged_decode_attn_ref` must equal gather + slice +
+             `decode_attn_ref` bitwise (the op's CPU dispatch resolves to
+             xla-ref, so this is also the engine's CI numerics), and the
+             int8/int4 page codecs must round-trip exactly on their own
+             decode points (zero rows, re-encoded codes).
+  allocator — `run_allocator_case` drives a PageAllocator against a
+             simulated pool, asserting no page is handed out while someone
+             holds it, refcounted shared pages survive any one owner's
+             eviction, and released pages come back only after an explicit
+             zeroing flush. tests/test_paging_properties.py feeds the same
+             driver hypothesis-drawn scripts when hypothesis is installed.
+  engine   — the hard contract: a paged engine is token-identical to the
+             contiguous-arena engine across the dense / pruned / packed /
+             speculative cells, prefix sharing skips prefills without
+             changing a single token, quantized pages shrink the pool, and
+             a drained engine leaves every unowned page bitwise zero.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import kv_quant_decode, kv_quant_encode
+from repro.kernels.ops import decode_attn_ref, paged_decode_attn_op
+from repro.launch import paging
+from repro.launch.engine import build_engine, synthetic_prompts
+
+ARCH = "internlm2-1.8b"
+
+
+# -------------------------------------------------------------- page codecs
+@pytest.mark.parametrize("bits", [8, 4])
+def test_kv_quant_roundtrip_properties(bits):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((3, 5, 8, 6)), jnp.float32)
+    codes, scale = kv_quant_encode(x, bits)
+    assert codes.dtype == jnp.int8
+    assert codes.shape[-1] == (x.shape[-1] // 2 if bits == 4 else x.shape[-1])
+    y = kv_quant_decode(codes, scale, bits)
+    # bounded error: one quantization step of the per-row absmax grid
+    qmax = (1 << (bits - 1)) - 1
+    bound = np.asarray(scale)[..., None] * np.ones(x.shape)
+    np.testing.assert_array_less(np.abs(np.asarray(y - x)), bound + 1e-7)
+    # decode points are fixed points: re-encoding decoded values is exact
+    c2, s2 = kv_quant_encode(y, bits)
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(kv_quant_decode(c2, s2, bits)),
+                                  np.asarray(y))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_kv_quant_zero_rows_stay_exact_zero(bits):
+    """Unwritten arena rows are zero; their codes and decode must be too,
+    or paged attention over a zero-backed page would leak noise."""
+    x = jnp.zeros((2, 4, 8), jnp.float32)
+    codes, scale = kv_quant_encode(x, bits)
+    assert not np.asarray(codes).any() and not np.asarray(scale).any()
+    assert not np.asarray(kv_quant_decode(codes, scale, bits)).any()
+
+
+# ------------------------------------------------------------ kernel oracle
+@pytest.mark.parametrize("kv_bits", [None, 8, 4],
+                         ids=["fp", "int8", "int4"])
+def test_paged_decode_attn_matches_gathered_reference(kv_bits):
+    """Gather pages -> flatten -> slice to seq_len -> decode_attn_ref is
+    the oracle; the paged op must match it bitwise (fp pages) or exactly
+    on the decoded codes (quantized pages decode first, then both sides
+    run identical attention math)."""
+    B, KVh, g, dh, P, Lp, seq_len = 2, 2, 3, 8, 8, 3, 20
+    n_pages = paging.N_RESERVED + B * Lp
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((B, KVh, g, dh)), jnp.float32)
+    pos = jnp.asarray([5, 17], jnp.int32)
+    pt = np.full((B, Lp), paging.ZERO_PAGE, np.int32)
+    nxt = paging.N_RESERVED
+    for b in range(B):
+        npp = paging.pages_for_rows(int(pos[b]) + 1, P)
+        pt[b, :npp] = range(nxt, nxt + npp)
+        nxt += npp
+    pt = jnp.asarray(pt)
+
+    rows = np.zeros((n_pages * P, KVh, dh), np.float32)
+    for b in range(B):
+        for r in range(int(pos[b]) + 1):
+            phys = int(pt[b, r // P]) * P + r % P
+            rows[phys] = rng.standard_normal((KVh, dh))
+    kpool = jnp.asarray(rows).reshape(n_pages, P, KVh, dh)
+    vpool = jnp.asarray(
+        rng.standard_normal((n_pages, P, KVh, dh)), jnp.float32)
+    vpool = vpool * (jnp.abs(kpool) > 0)     # zero where unwritten
+    kw = {}
+    if kv_bits is not None:
+        kpool, ks = kv_quant_encode(kpool, kv_bits)
+        vpool, vs = kv_quant_encode(vpool, kv_bits)
+        kw = dict(k_scale=ks, v_scale=vs)
+
+    got = paged_decode_attn_op(q, kpool, vpool, pos, pt, page_size=P,
+                               seq_len=seq_len, kv_bits=kv_bits, **kw)
+
+    def flat(pool, scale=None):
+        gathered = jnp.take(pool, pt, axis=0)
+        if kv_bits is not None:
+            gathered = kv_quant_decode(gathered,
+                                       jnp.take(scale, pt, axis=0), kv_bits)
+        return gathered.reshape(B, Lp * P, KVh, dh)[:, :seq_len]
+
+    want = decode_attn_ref(q, flat(kpool, kw.get("k_scale")),
+                           flat(vpool, kw.get("v_scale")), pos)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------- allocator
+def run_allocator_case(script, n_pages=12, page_size=4):
+    """Drive a PageAllocator through an op script against a simulated
+    pool, asserting the structural invariants after every op:
+
+      no double-hand-out — `alloc` never returns a page any owner holds;
+      zero-before-reuse  — every page `alloc` returns reads all-zero in
+                           the pool (released pages sit in the dirty
+                           quarantine until an explicit flush zeroes
+                           them, so skipping the flush starves `alloc`
+                           rather than leaking stale rows);
+      sharing            — `retain`ed pages survive any one owner's
+                           release with their contents intact.
+
+    Ops: ("alloc", owner, n) — may observe MemoryError when free pages
+    run short; ("share", new, src) — new owner retains src's pages;
+    ("release", owner); ("flush",).
+    """
+    alloc = paging.PageAllocator(n_pages, page_size)
+    pool = np.zeros((n_pages, page_size), np.int64)  # simulated device pool
+    holds: dict = {}          # owner -> list of (page, marker)
+    marker = 0
+    for op in script:
+        if op[0] == "alloc":
+            _, owner, n = op
+            if owner in holds:
+                continue
+            if not alloc.can_alloc(n):
+                with pytest.raises(MemoryError):
+                    alloc.alloc(n)
+                continue
+            pages = alloc.alloc(n)
+            held = {p for pages_ in holds.values() for p, _ in pages_}
+            assert not held & set(pages), "page handed out while held"
+            assert all(p >= paging.N_RESERVED for p in pages)
+            for p in pages:
+                assert not pool[p].any(), f"page {p} reused before zeroing"
+            marker += 1
+            pool[pages] = marker
+            holds[owner] = [(p, marker) for p in pages]
+        elif op[0] == "share":
+            _, new, src = op
+            if src not in holds or new in holds:
+                continue
+            pages = [p for p, _ in holds[src]]
+            alloc.retain(pages)
+            holds[new] = list(holds[src])
+        elif op[0] == "release":
+            _, owner = op
+            if owner not in holds:
+                continue
+            dirty = alloc.release([p for p, _ in holds.pop(owner)])
+            still_held = {p for pages_ in holds.values() for p, _ in pages_}
+            assert not set(dirty) & still_held, \
+                "shared page quarantined while another owner holds it"
+        elif op[0] == "flush":
+            dirty = alloc.take_dirty()
+            pool[dirty] = 0
+            alloc.mark_zeroed(dirty)
+        else:                                        # pragma: no cover
+            raise ValueError(op)
+        alloc.check()
+        # surviving holds read back their own marker — nobody scribbled
+        for owner, pages_ in holds.items():
+            for p, m in pages_:
+                assert (pool[p] == m).all(), f"{owner}'s page {p} corrupted"
+    alloc.check()
+
+
+def test_allocator_reuse_requires_flush():
+    run_allocator_case([
+        ("alloc", "a", 5), ("alloc", "b", 5),
+        ("release", "a"),
+        ("alloc", "c", 5),          # free list short: MemoryError, no leak
+        ("flush",),
+        ("alloc", "c", 5),          # now succeeds, pages read back zero
+        ("release", "b"), ("release", "c"), ("flush",),
+        ("alloc", "d", 10),
+    ])
+
+
+def test_allocator_shared_pages_survive_one_owner():
+    run_allocator_case([
+        ("alloc", "a", 4),
+        ("share", "b", "a"), ("share", "c", "a"),
+        ("release", "a"), ("flush",),    # b and c still read their marker
+        ("release", "b"), ("flush",),
+        ("alloc", "d", 6),               # c's 4 pages must not be among d's
+        ("release", "c"), ("flush",),
+        ("alloc", "e", 10),
+    ])
+
+
+def test_allocator_rejects_bad_lifecycle_transitions():
+    alloc = paging.PageAllocator(8, 4)
+    pages = alloc.alloc(2)
+    with pytest.raises(ValueError):
+        alloc.retain([paging.ZERO_PAGE])        # reserved pages: no refcount
+    dirty = alloc.release(pages)
+    assert sorted(dirty) == sorted(pages)
+    with pytest.raises(ValueError):
+        alloc.retain(pages)                     # dirty pages are not live
+    with pytest.raises(ValueError):
+        alloc.mark_zeroed(pages)                # not taken yet
+    assert sorted(alloc.take_dirty()) == sorted(pages)
+    alloc.mark_zeroed(pages)
+    alloc.check()
+
+
+# ------------------------------------------------------- engine token parity
+def _run_engine(paged, cell, prompts, gen, **kw):
+    eng, lm = build_engine(ARCH, True, max_slots=2, max_seq=32,
+                           paged=paged, **dict(cell, **kw))
+    for p in prompts:
+        eng.submit(p, gen)
+    eng.warmup()
+    return eng, eng.run()
+
+
+CELLS = {
+    "dense": {},
+    "pruned_s50": dict(pruned=True, sparsity=0.5),
+    "packed_b4": dict(packed=True, bits_init=4.0),
+    "speculative": dict(speculative=True, draft_k=4),
+}
+
+
+@pytest.mark.parametrize("cell", sorted(CELLS), ids=sorted(CELLS))
+def test_paged_engine_token_identical_to_contiguous(cell):
+    """The arena swap changes where KV rows live, never what they hold:
+    greedy tokens must match bit-for-bit in every serving cell."""
+    _, lm = build_engine(ARCH, True, max_slots=2, max_seq=32, **CELLS[cell])
+    prompts = synthetic_prompts(lm.cfg, [5, 9, 17, 3], seed=0)
+    _, want = _run_engine(False, CELLS[cell], prompts, 8)
+    eng, got = _run_engine(True, CELLS[cell], prompts, 8)
+    assert sorted(got) == sorted(want)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid],
+                                      err_msg=f"{cell} request {rid}")
+    assert eng.stats["evicted"] == len(prompts)
+
+
+def test_prefix_sharing_skips_prefills_without_changing_tokens():
+    """Duplicate prompts hit the whole-prompt prefix cache: the repeat
+    admissions reuse the refcounted prompt pages and the memoized first
+    token (no prefill dispatch at all), and still emit the exact token
+    stream of a sharing-free engine."""
+    _, lm = build_engine(ARCH, True, max_slots=2, max_seq=32)
+    prompts = synthetic_prompts(lm.cfg, [9, 9, 9, 17], seed=0)
+    prompts[1], prompts[2] = prompts[0].copy(), prompts[0].copy()
+    ref, want = _run_engine(True, {}, prompts, 8, prefix_sharing=False)
+    eng, got = _run_engine(True, {}, prompts, 8)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid],
+                                      err_msg=f"request {rid}")
+    assert ref.stats["prefills"] == 4 and ref.stats["prefix_hits"] == 0
+    assert eng.stats["prefills"] == 2       # 9-token once, 17-token once
+    assert eng.stats["prefix_hits"] == 2
+    # a repeated one-token request is answered purely from the memo
+    rid = eng.submit(prompts[0], 1)
+    out = eng.run()
+    assert out[rid][0] == want[0][0]
+    assert eng.stats["prefills"] == 2 and eng.stats["prefix_hits"] == 3
+
+
+def test_quantized_pages_shrink_the_pool_and_serve():
+    """int8 pages halve (int4 quarter) the pool bytes of the f32 smoke
+    arena; the serve still drains with full-length outputs (numerics are
+    approximate by design, so no token-identity claim)."""
+    _, lm = build_engine(ARCH, True, max_slots=2, max_seq=32)
+    prompts = synthetic_prompts(lm.cfg, [5, 9], seed=0)
+    fp, out_fp = _run_engine(True, {}, prompts, 6)
+    q8, out_q8 = _run_engine(True, {}, prompts, 6, kv_bits=8)
+    assert q8.kv_pool_bytes() < fp.kv_pool_bytes()
+    assert all(len(out_q8[r]) == 6 for r in out_q8)
+    # the first token comes from the (full-precision) prefill: identical
+    for rid in out_fp:
+        assert out_q8[rid][0] == out_fp[rid][0]
+
+
+def test_drained_engine_leaves_unowned_pages_zero():
+    """After a drain, every page not reserved and not held (by a slot or
+    the prefix cache) must be bitwise zero in every pool — the
+    allocator's zero-before-reuse contract, observed from the device."""
+    _, lm = build_engine(ARCH, True, max_slots=2, max_seq=32)
+    prompts = synthetic_prompts(lm.cfg, [5, 9, 17], seed=0)
+    eng, _ = _run_engine(True, {}, prompts, 6, prefix_sharing=False)
+    assert eng.alloc.n_live == 0            # sharing off: drain frees all
+    unowned = [p for p in range(paging.N_RESERVED, eng.n_pages)
+               if eng.alloc.refcount[p] == 0]
+    assert unowned
+    for key, leaf in eng.caches.items():
+        if key.endswith(".k") or key.endswith(".v"):
+            arr = np.asarray(leaf)
+            assert not arr[:, unowned].any(), f"stale rows in {key}"
+    # kv_bytes tracks allocation: an idle drained engine pins only the
+    # reserved pages (plus table + state), far below the full pool
+    assert eng.kv_bytes() < eng.kv_pool_bytes()
