@@ -698,6 +698,105 @@ def bench_engine_paged_kv(fast=False):
     return results
 
 
+def bench_engine_tp(fast=False):
+    """Tensor-parallel serving (DESIGN.md §4.12): engine decode at TP
+    1 / 2 / 4 on the same weights/prompts/seed, plus the disaggregated
+    chunked-prefill row.
+
+    On a 1-device host only the tp=1 row runs; under
+    `XLA_FLAGS=--xla_force_host_platform_device_count=4` the 2- and
+    4-device rows appear. Fake CPU devices share the same cores, so
+    `us_per_tok` measures GSPMD dispatch overhead, not a speedup — the
+    quantities that transfer to hardware are the per-device param/KV
+    bytes (the ~1/tp memory claim) and the token-identity assert (every
+    TP arm must emit exactly the 1-device stream; the smoke arch has 2
+    KV heads, so tp=4 shows the replicate-fallback: params still shrink,
+    the arena doesn't). The chunked row serves a long prompt behind a
+    short one and records how many decode steps ran mid-prefill — the
+    head-of-line-blocking fix, asserted nonzero. Persists to
+    BENCH_tp.json at the repo root."""
+    import json
+    import os
+
+    from repro.launch.engine import build_engine, synthetic_prompts
+
+    slots = 4
+    gen = 12 if fast else 24
+    lens = [6, 6, 6, 6]
+    sizes = [n for n in (1, 2, 4) if n <= jax.device_count()]
+    results = {}
+    base_tokens = None
+    for n in sizes:
+        eng, lm = build_engine("internlm2-1.8b", True, max_slots=slots,
+                               max_seq=max(lens) + gen, tp=n if n > 1 else 0)
+        for p in synthetic_prompts(lm.cfg, lens):
+            eng.submit(p, gen)
+        eng.warmup()
+        toks = eng.run()
+        if base_tokens is None:
+            base_tokens = toks
+        else:
+            for rid in base_tokens:
+                np.testing.assert_array_equal(
+                    toks[rid], base_tokens[rid],
+                    err_msg=f"tp={n} decode diverged from 1-device")
+        us = eng.stats["decode_s"] * 1e6 / max(eng.stats["decode_tokens"], 1)
+        full_p, per_p = eng.param_bytes(), eng.param_bytes(per_device=True)
+        full_k, per_k = eng.kv_bytes(), eng.kv_bytes(per_device=True)
+        _row(f"engine_decode_tp_{n}dev", us,
+             f"tok_per_s={eng.throughput()['decode_tok_per_s']:.1f};"
+             f"param_bytes_per_dev={per_p};"
+             f"param_shrink={full_p / max(per_p, 1):.2f}x;"
+             f"kv_bytes_per_dev={per_k};"
+             f"kv_shrink={full_k / max(per_k, 1):.2f}x;"
+             f"token_identical={base_tokens is not None}")
+        results[f"tp{n}"] = {
+            "devices": n, "us_per_tok": us,
+            "param_bytes_per_dev": int(per_p), "param_bytes": int(full_p),
+            "kv_bytes_per_dev": int(per_k), "kv_bytes": int(full_k),
+            "token_identical": True,
+        }
+
+    # disaggregated chunked prefill: a 40-token prompt prefills in chunks
+    # of 8 behind an already-decoding short request; without chunking the
+    # long prefill is one dispatch every active slot waits on
+    chunk = 8
+    eng, lm = build_engine("internlm2-1.8b", True, max_slots=2, max_seq=64,
+                           prefill_chunk=chunk)
+    prompts = synthetic_prompts(lm.cfg, [6, 40])
+    eng.submit(prompts[0], 16 if fast else 32)
+    eng.submit(prompts[1], 8)
+    eng.warmup()
+    eng.run()
+    assert eng.stats["decode_steps_mid_prefill"] > 0, \
+        "chunked prefill never interleaved a decode step"
+    us = eng.stats["decode_s"] * 1e6 / max(eng.stats["decode_tokens"], 1)
+    _row("engine_prefill_chunked", us,
+         f"chunk={chunk};prefill_chunks={eng.stats['prefill_chunks']};"
+         f"decode_steps_mid_prefill={eng.stats['decode_steps_mid_prefill']};"
+         f"tok_per_s={eng.throughput()['decode_tok_per_s']:.1f}")
+    results["chunked_prefill"] = {
+        "chunk": chunk, "us_per_tok": us,
+        "prefill_chunks": int(eng.stats["prefill_chunks"]),
+        "decode_steps_mid_prefill":
+            int(eng.stats["decode_steps_mid_prefill"]),
+    }
+
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_tp.json")
+    payload = {
+        "bench": "engine_tp",
+        "arch": "internlm2-1.8b(smoke)",
+        "workload": {"slots": slots, "prompt_lens": lens, "gen": gen,
+                     "prefill_chunk": chunk},
+        "host_backend": jax.default_backend(),
+        "rows": results,
+    }
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return results
+
+
 def bench_sharded_train_scaling(fast=False):
     """1 -> N-device GETA train-step scaling (data-parallel, deterministic
     ordered reduction — DESIGN.md §5).
@@ -765,7 +864,7 @@ ALL = [bench_table2_resnet20, bench_table3_bert, bench_table4_vgg7,
        bench_engine_prefill, bench_engine_continuous,
        bench_engine_decode_pruned, bench_engine_decode_packed,
        bench_engine_decode_attn, bench_engine_decode_speculative,
-       bench_engine_paged_kv, bench_sharded_train_scaling]
+       bench_engine_paged_kv, bench_engine_tp, bench_sharded_train_scaling]
 
 
 def main() -> None:

@@ -20,7 +20,19 @@ arena (DESIGN.md §4.11): per-request KV is page-granular, identical
 prompts share refcounted pages and skip their prefill (`--hot-prompt`
 sends every request the same prompt — watch `prefix_hits`), and
 `--kv-bits 8|4` stores the pages as int8/nibble-packed codes
-dequantized in-VMEM by the flash-decode kernel.
+dequantized in-VMEM by the flash-decode kernel. `--tp N` shards the
+whole stack over an N-device mesh — attention heads, MLP hidden, vocab,
+and the KV arena's head axis — token-identical to 1 device with
+per-device param/KV bytes ~1/N (`--devices N` forces N fake host
+devices for trying this on a CPU box); `--chunked-prefill C` prefills
+prompts at most C rows per step into a staging row so decode keeps
+running mid-prefill (DESIGN.md §4.12).
+
+    PYTHONPATH=src python examples/serve_engine.py --devices 4 --tp 4 \
+        --packed --bits 4 --prompt-lens 16,4,9,12 --gens 12 --slots 2
+
+    PYTHONPATH=src python examples/serve_engine.py --chunked-prefill 8 \
+        --prompt-lens 6,40 --gens 24,8 --slots 2
 
     PYTHONPATH=src python examples/serve_engine.py --packed --pruned \
         --bits 4 --prompt-lens 16,4,9,12 --gens 24,8,16,12 --slots 2
@@ -94,7 +106,28 @@ def main():
                          "the *identical* prompt (prefixes of the first "
                          "request's tokens) — the prefix-sharing demo: "
                          "repeats admit with prefix_hits, no prefill")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="shard the engine over a tp-device mesh "
+                         "(attention heads / MLP hidden / vocab / KV-head "
+                         "axis) — token-identical to 1 device, per-device "
+                         "bytes ~1/tp (DESIGN.md §4.12)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N fake host devices "
+                         "(xla_force_host_platform_device_count) so --tp "
+                         "runs on a CPU box")
+    ap.add_argument("--chunked-prefill", type=int, default=None,
+                    metavar="CHUNK",
+                    help="prefill prompts at most CHUNK rows per step into "
+                         "a staging row so decode keeps running mid-prefill "
+                         "(DESIGN.md §4.12)")
     args = ap.parse_args()
+    if args.devices:
+        import os
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        if "xla_force_host_platform_device_count" not in \
+                os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = \
+                (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
     if args.kv_bits is not None:
         args.paged = True
 
@@ -113,7 +146,8 @@ def main():
                            draft_k=args.draft_k,
                            draft_sparsity=args.draft_sparsity,
                            draft_bits=args.draft_bits, paged=args.paged,
-                           page_size=args.page_size, kv_bits=args.kv_bits)
+                           page_size=args.page_size, kv_bits=args.kv_bits,
+                           tp=args.tp, prefill_chunk=args.chunked_prefill)
     prompts = synthetic_prompts(lm.cfg, lens)
     if args.hot_prompt:
         prompts = [prompts[0][:n].copy() for n in lens]
@@ -141,6 +175,16 @@ def main():
         line += (f"; paged: {s['prefills']} prefills, "
                  f"{s['prefix_hits']} prefix hits, kv_bytes "
                  f"{eng.kv_bytes()} of {eng.kv_pool_bytes()} pooled")
+    if args.tp:
+        line += (f"; tp={args.tp}: param bytes/device "
+                 f"{eng.param_bytes(per_device=True)} of "
+                 f"{eng.param_bytes()}, kv bytes/device "
+                 f"{eng.kv_bytes(per_device=True)} of {eng.kv_bytes()}")
+    if args.chunked_prefill:
+        line += (f"; chunked@{args.chunked_prefill}: "
+                 f"{s['prefill_chunks']} chunks, "
+                 f"{s['decode_steps_mid_prefill']} decode steps "
+                 f"mid-prefill")
     print(line)
 
 

@@ -127,6 +127,83 @@ def make_plan(mesh: Mesh, *, fsdp: bool = False,
     return ShardingPlan(mesh=mesh, rules=rules, fallbacks=[])
 
 
+def serving_axes_for(name: str, params_axes: dict[str, tuple]
+                     ) -> Optional[tuple]:
+    """Logical axes for a *served* param key.
+
+    `core.subnet.servable_params` rewrites each compressed weight `<w>`
+    into derived keys the model init never named:
+
+      <w>.codes      int8/int16 codes, same rank/layout as <w>
+      <w>.packed{b}  int32 K-packed words — K shrinks to ceil(K/cpw) but
+                     the axis ORDER is unchanged, so <w>'s logical axes
+                     still label it (spec_for's divisibility check then
+                     decides per packed shape whether the word count still
+                     divides the mesh)
+      <w>.scale      per-tensor scale, scalar or (layers,) when stacked
+
+    Dense keys pass through; unknown keys return None (replicate)."""
+    if name in params_axes:
+        return params_axes[name]
+    base, _, suffix = name.rpartition(".")
+    ax = params_axes.get(base)
+    if ax is None:
+        return None
+    if suffix == "codes" or (suffix.startswith("packed")
+                             and suffix[len("packed"):].isdigit()):
+        return ax
+    if suffix == "scale":
+        return ("layers",)      # (layers,) when stacked; rank-0 replicates
+    return None
+
+
+def serving_param_specs(plan: ShardingPlan, params_axes: dict[str, tuple],
+                        params: dict) -> dict[str, P]:
+    """PartitionSpecs for an engine's served param dict (dense weights,
+    int codes, packed word streams, scales — DESIGN.md §4.12).
+
+    Anything whose logical axes can't be recovered (or whose rank no
+    longer matches, e.g. a per-tensor scalar scale) replicates; every
+    genuinely TP-shardable axis (q/kv heads, mlp hidden, vocab_out) goes
+    through the same `spec_for` divisibility-checked rules training uses,
+    so a pruned width that stops dividing the mesh falls back to
+    replication instead of crashing — recorded in `plan.fallbacks`."""
+    specs = {}
+    for name, leaf in params.items():
+        ax = serving_axes_for(name, params_axes)
+        if ax is None or len(ax) != np.ndim(leaf):
+            specs[name] = P()
+        else:
+            specs[name] = plan.spec_for(name, tuple(ax), np.shape(leaf))
+    return specs
+
+
+def kv_cache_specs(mesh: Mesh, cache_shapes: dict[str, tuple]
+                   ) -> dict[str, P]:
+    """PartitionSpecs for an engine KV arena, contiguous or paged.
+
+    Attention K/V leaves shard their KV-head axis over `model` — axis 3
+    in both the contiguous (nb, B, S, KVh, dh) arena and the paged
+    (nb, n_pages, P, KVh, dh) pools, and likewise the paged per-row
+    scale planes (nb, n_pages, P, KVh). The page/slot/row axes are never
+    split: page tables stay host-side and every logical page maps to one
+    local tile per device. A KVh that doesn't divide the mesh replicates
+    (GQA smoke configs with 2 kv heads on 4 devices); recurrent-state
+    leaves (mamba h/conv, rwkv shift/wkv) are O(1)-per-slot and
+    replicate."""
+    size = int(mesh.shape.get("model", 1))
+    specs: dict[str, P] = {}
+    for name, shape in cache_shapes.items():
+        kv = name.endswith(".k") or name.endswith(".v")
+        sc = name.endswith("_scale")
+        if size > 1 and ((kv and len(shape) == 5) or (sc and len(shape) == 4)) \
+                and shape[3] % size == 0:
+            specs[name] = P(None, None, None, "model")
+        else:
+            specs[name] = P()
+    return specs
+
+
 def batch_spec(mesh: Mesh, *, shard_seq: bool = False,
                mode: str = "tp") -> P:
     axes = ("pod", "data") if mode != "zero" else ("pod", "data", "model")

@@ -160,6 +160,47 @@ def decode_attn_pallas(q, k, v, pos, *, window: int = 0,
     return out[:, :, :g, :dh]
 
 
+def tp_decode_attn(q, k, v, pos, *, mesh, axis: str = "model",
+                   window: int = 0, chunk: int | None = None,
+                   backend: str | None = None) -> jax.Array:
+    """KV-head-parallel flash decode over one mesh axis via `shard_map`.
+
+    Decode attention is embarrassingly parallel over KV heads — softmax
+    normalizes within a head and GQA groups ride their KV head — so the
+    TP layout splits q on its head axis (1) and the k/v arenas on theirs
+    (2), each device runs the single-device kernel over KVh/tp local
+    heads, and the (B, KVh, g, dh) output concatenates over heads with
+    **no cross-device reduction**: per-head numerics are exactly the
+    1-device kernel's. `pos` replicates (it is per-slot, not per-head).
+
+    Like `tp_gemm`, the kernel call sits *inside* shard_map where it is
+    partitioned already, so the default backend is
+    `dispatch.shard_local_default()` — TPU hosts keep the fused kernel
+    under TP instead of the mesh-demoted einsum path."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels import ops as _ops
+    from repro.kernels import dispatch
+
+    tp = int(mesh.shape[axis])
+    KVh = q.shape[1]
+    if KVh % tp:
+        raise ValueError(f"tp_decode_attn: KVh={KVh} must divide the "
+                         f"{axis!r} axis size {tp}")
+    backend = backend or dispatch.shard_local_default()
+
+    def body(ql, kl, vl, pl_):
+        return _ops.decode_attn_op(ql, kl, vl, pl_, window=window,
+                                   chunk=chunk, backend=backend)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, axis), P(None, None, axis), P(None, None, axis),
+                  P()),
+        out_specs=P(None, axis), check_rep=False)(q, k, v, pos)
+
+
 def _page_dequant(w, scale, bits):
     """Decode one int8 code tile (P, dhs) to f32 rows in VMEM.
 

@@ -71,6 +71,18 @@ def backend_for_mesh(mesh) -> str:
     return "xla-ref" if size > 1 else platform_default()
 
 
+def shard_local_default() -> str:
+    """Backend for kernels running *inside* `shard_map`.
+
+    Per-device code under shard_map is no longer opaque to GSPMD — the
+    partitioning already happened at the shard_map boundary — so the
+    device-count guard in `platform_default` doesn't apply: TPU hosts keep
+    the MXU Pallas kernels regardless of mesh size, everything else stays
+    on the XLA oracle. This is what the `tp_gemm` / `tp_decode_attn`
+    wrappers resolve when no explicit backend is passed."""
+    return "pallas-tpu" if jax.default_backend() == "tpu" else "xla-ref"
+
+
 def set_backend(name: str | None) -> None:
     """Process-wide backend override (None restores platform selection)."""
     if name is not None and name not in BACKENDS:

@@ -164,7 +164,7 @@ def _clamp_blocks(blocks, M, N, K):
 
 
 def gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,
-         blocks=DEFAULT_BLOCKS, backend: str | None = None,
+         blocks=None, backend: str | None = None,
          out_dtype=None) -> jax.Array:
     """y = x @ T(w) with T the composition of `rhs_ops`.
 
@@ -173,6 +173,12 @@ def gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,
     the K-packed int32 word stream of shape (ceil(K / k_pack), N). COL
     operands are (N,) vectors; SCALAR operands are scalars. Pads every dim
     to block multiples once; output sliced back to (M, N).
+
+    `blocks=None` (default) consults the `kernels.autotune` per-shape
+    table — a tuned (bm, bn, bk) for this exact (M, N, K, epilogue,
+    backend) if one was recorded, `DEFAULT_BLOCKS` otherwise — so TP
+    shards and pruned widths don't run tiles sized for full shapes.
+    Pass explicit blocks to bypass the table (parity tests do).
     """
     backend = dispatch.resolve(backend)
     M, K = x.shape
@@ -185,6 +191,11 @@ def gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,
     else:
         assert K == Kw, (x.shape, w.shape)
     out_dtype = out_dtype or x.dtype
+
+    if blocks is None:
+        from repro.kernels import autotune
+        blocks = autotune.lookup(M, N, K, autotune.ops_key(rhs_ops),
+                                 backend) or DEFAULT_BLOCKS
 
     if backend == "xla-ref":
         w32 = w if k_pack > 1 else w.astype(jnp.float32)
@@ -242,3 +253,61 @@ def gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,
         interpret=(backend == "pallas-interpret"),
     )(xp, wp, *operands)
     return y[:M, :N].astype(out_dtype)
+
+
+# ---------------------------------------------------------- tensor parallel
+def tp_gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,
+            mesh, axis: str = "model", blocks=None,
+            backend: str | None = None, out_dtype=None) -> jax.Array:
+    """Column-parallel y = x @ T(w) over one mesh axis via `shard_map`.
+
+    The N dimension tiles across `axis`: the weight (and packed word
+    stream — packing runs along K, so its columns split identically) and
+    every per-column COL operand shard as P(None, axis) / P(axis), x
+    replicates, and each device runs the full-K single-device `gemm` on
+    its local (K, N/tp) shard. There is **no cross-device reduction** —
+    each output column is produced wholly on one device with the exact
+    single-device kernel arithmetic, so TP numerics are the 1-device
+    numerics per column (the property the engine token-parity tests
+    lean on). The returned array is the full (M, N) global result,
+    laid out column-sharded over `axis`.
+
+    Unlike a bare `gemm` inside a sharded program (an opaque custom call
+    GSPMD would all-gather around — see `dispatch.platform_default`),
+    the kernel here runs per device *inside* shard_map, so TPU hosts keep
+    the MXU path under TP: the default backend is
+    `dispatch.shard_local_default()`, not the mesh-demoted default.
+    Block sizes resolve per *local* shape, so the autotune table tunes
+    the (M, N/tp, K) shard, not the full width."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    tp = int(mesh.shape[axis])
+    M, K = x.shape
+    N = w.shape[1]
+    if N % tp:
+        raise ValueError(f"tp_gemm: N={N} must divide the {axis!r} axis "
+                         f"size {tp}")
+    backend = backend or dispatch.shard_local_default()
+
+    in_specs = [P(), P(None, axis)]
+    operands = []
+    layout = []
+    for op in rhs_ops:
+        layout.append((op.name, op.kinds, op.apply, op.k_pack))
+        for kind, v in zip(op.kinds, op.operands):
+            operands.append(v)
+            in_specs.append(P(axis) if kind == COL else P())
+
+    def body(xl, wl, *vals):
+        i, ops_l = 0, []
+        for name, kinds, apply, k_pack in layout:
+            ops_l.append(RhsOp(name, kinds, apply,
+                               tuple(vals[i:i + len(kinds)]), k_pack=k_pack))
+            i += len(kinds)
+        return gemm(xl, wl, tuple(ops_l), blocks=blocks, backend=backend,
+                    out_dtype=out_dtype)
+
+    return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=P(None, axis), check_rep=False)(
+                         x, w, *operands)

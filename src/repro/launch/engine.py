@@ -27,6 +27,25 @@ on dense fake-quant params and on `--compressed` Subnet int codes —
 `core.subnet.prepare_serving` resolves the pair once and every jit closes
 over the same arrays.
 
+Two orthogonal scaling axes ride on top (PR 9, DESIGN.md §4.12):
+
+- **tensor parallelism** — `Engine(..., mesh=make_tp_mesh(n))` shards the
+  served params (attention heads / MLP hidden / vocab through the
+  training `ShardingPlan` rules, int codes and packed word streams by
+  name mapping) and the KV arena — contiguous *and* paged pools — by KV
+  head over the mesh's `model` axis. Every jit pins its output shardings
+  so the arena stays device-resident and sharded across the whole decode
+  loop; page tables and slot bookkeeping stay host-side, unchanged. An
+  N-device engine is token-identical to the 1-device engine (the
+  `serve --tp --smoke` parity matrix pins dense/pruned/packed/paged).
+- **disaggregated chunked prefill** — `scheduler=
+  ChunkedPrefillScheduler(chunk)` (launch/scheduler.py) splits each
+  prompt's prefill into bounded chunks staged into a private row cache
+  (`LM.verify_chunk` at absolute positions), interleaving one decode
+  batch per chunk so a long prompt can no longer head-of-line-block the
+  active slots; the finished row hands off to a free slot through the
+  engine's handoff queue exactly like a one-shot prefill row would.
+
 Smoke:
   PYTHONPATH=src python -m repro.launch.serve --smoke --compressed \
       --prompt-lens 12,5 --gen 8
@@ -90,7 +109,9 @@ class Engine:
                  max_slots: int = 4, max_seq: int = 64,
                  draft=None, draft_k: int = 4, paged: bool = False,
                  page_size: int = 16, kv_bits: Optional[int] = None,
-                 n_pages: Optional[int] = None, prefix_sharing: bool = True):
+                 n_pages: Optional[int] = None, prefix_sharing: bool = True,
+                 mesh=None, param_axes: Optional[dict] = None,
+                 scheduler=None):
         cfg = lm.cfg
         if cfg.num_codebooks or cfg.vision_patches:
             raise ValueError("the engine serves plain token LMs; codebook "
@@ -98,12 +119,65 @@ class Engine:
                              "use the static loop (serve.py --static / "
                              "serve_loop) for these archs")
         self.lm = lm
-        self.params = params
-        self.qparams = qparams
         self.max_slots = max_slots
         self.max_seq = max_seq
         dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self._cache_dtype = dt
+
+        # --- tensor parallelism (DESIGN.md §4.12) ----------------------
+        # params shard through the training ShardingPlan's TP rules (the
+        # served dict's derived keys — .codes / .packed{b} / .scale — map
+        # back to their base weight's axes by name); the KV arena shards
+        # by KV head. Shapes the mesh can't divide replicate, recorded in
+        # `tp_fallbacks` so the smoke can report them.
+        self.mesh = mesh
+        self._rep = None            # NamedSharding(mesh, P()) when TP
+        self._arena_sh = None       # per-leaf shardings: slot/page arena
+        self._row_sh = None         # ... a (1, max_seq) staging row
+        self._darena_sh = None      # ... draft arena / draft row
+        self._drow_sh = None
+        self.tp_fallbacks: list = []
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as PSpec
+            from repro.distributed import sharding as shlib
+            if param_axes is None:
+                # recover the logical axes without materializing a second
+                # init: abstract-eval lm.init and capture the axes dict it
+                # returns (names are stable across pruning — apply_slim_plan
+                # reshapes, it never renames)
+                captured: dict = {}
+
+                def _cap(key):
+                    p, a = lm.init(key)
+                    captured.update(a)
+                    return p
+
+                jax.eval_shape(_cap, jax.random.PRNGKey(0))
+                param_axes = captured
+            plan = shlib.make_plan(mesh, mode="tp")
+            pspecs = shlib.serving_param_specs(plan, param_axes, params)
+            params = jax.device_put(
+                params, {k: NamedSharding(mesh, s)
+                         for k, s in pspecs.items()})
+            if qparams is not None:
+                qparams = jax.device_put(qparams,
+                                         NamedSharding(mesh, PSpec()))
+            self._rep = NamedSharding(mesh, PSpec())
+            self.tp_fallbacks = list(plan.fallbacks)
+        self.param_axes = dict(param_axes or {})
+        self.params = params
+        self.qparams = qparams
+        mesh_ = mesh
+
+        def _jit(fn, static_argnums=(), out_shardings=None):
+            # every engine jit pins its output shardings under TP so the
+            # arena never silently de-shards between dispatches; without a
+            # mesh this is exactly jax.jit
+            if mesh_ is None or out_shardings is None:
+                return jax.jit(fn, static_argnums=static_argnums)
+            return jax.jit(fn, static_argnums=static_argnums,
+                           out_shardings=out_shardings)
         self.paged = bool(paged)
         self.page_size = int(page_size)
         self.kv_bits = kv_bits
@@ -131,6 +205,22 @@ class Engine:
                                               kv_bits=kv_bits)
         else:
             self.caches = lm.init_cache(max_slots, max_seq, dtype=dt)
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.distributed import sharding as shlib
+            arena_specs = shlib.kv_cache_specs(
+                mesh, {k: v.shape for k, v in self.caches.items()})
+            self._arena_sh = {k: NamedSharding(mesh, s)
+                              for k, s in arena_specs.items()}
+            self.caches = jax.device_put(self.caches, self._arena_sh)
+            # prefill staging rows are contiguous (1, max_seq) caches even
+            # under the paged arena — they get their own spec set
+            row_tmpl = jax.eval_shape(
+                lambda: lm.init_cache(1, max_seq, dtype=dt))
+            row_specs = shlib.kv_cache_specs(
+                mesh, {k: v.shape for k, v in row_tmpl.items()})
+            self._row_sh = {k: NamedSharding(mesh, s)
+                            for k, s in row_specs.items()}
         # host-side slot table: position, last emitted token, owner
         self.pos = np.zeros((max_slots,), np.int32)
         self.last_tok = np.zeros((max_slots,), np.int32)
@@ -143,7 +233,9 @@ class Engine:
                       "draft_prefills": 0, "draft_prefill_tokens": 0,
                       "draft_prefill_s": 0.0, "prefix_hits": 0,
                       "admitted": 0, "evicted": 0,
-                      "spec_steps": 0, "spec_drafted": 0, "spec_accepted": 0}
+                      "spec_steps": 0, "spec_drafted": 0, "spec_accepted": 0,
+                      "prefill_chunks": 0, "chunked_prefills": 0,
+                      "decode_steps_mid_prefill": 0}
         self.serving_meta: dict = {}   # prepare_serving meta (build_engine)
 
         # speculative decoding: a DraftModel (launch/speculative.py) adds
@@ -179,8 +271,47 @@ class Engine:
             else:
                 self.dcaches = draft.lm.init_cache(max_slots, max_seq,
                                                    dtype=dt)
+            if mesh is not None:
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as PSpec
+                from repro.distributed import sharding as shlib
+                # the draft arena shards by *its* (sliced) KV heads; the
+                # draft's served params shard through the same TP rules
+                dspecs = shlib.kv_cache_specs(
+                    mesh, {k: v.shape for k, v in self.dcaches.items()})
+                self._darena_sh = {k: NamedSharding(mesh, s)
+                                   for k, s in dspecs.items()}
+                self.dcaches = jax.device_put(self.dcaches, self._darena_sh)
+                drow_tmpl = jax.eval_shape(
+                    lambda: draft.lm.init_cache(1, max_seq, dtype=dt))
+                drow_specs = shlib.kv_cache_specs(
+                    mesh, {k: v.shape for k, v in drow_tmpl.items()})
+                self._drow_sh = {k: NamedSharding(mesh, s)
+                                 for k, s in drow_specs.items()}
+                dcap: dict = {}
+
+                def _dcap(key):
+                    p, a = draft.lm.init(key)
+                    dcap.update(a)
+                    return p
+
+                jax.eval_shape(_dcap, jax.random.PRNGKey(0))
+                dplan = shlib.make_plan(mesh, mode="tp")
+                dpspecs = shlib.serving_param_specs(dplan, dcap,
+                                                    draft.params)
+                draft.params = jax.device_put(
+                    draft.params, {k: NamedSharding(mesh, s)
+                                   for k, s in dpspecs.items()})
+                if draft.qparams is not None:
+                    draft.qparams = jax.device_put(
+                        draft.qparams, NamedSharding(mesh, PSpec()))
+                self.tp_fallbacks += [("draft:" + n, a, d)
+                                      for n, a, d in dplan.fallbacks]
             spec_fn = make_spec_step(lm, draft.lm)
-            self._spec = jax.jit(spec_fn, static_argnums=(8,))
+            self._spec = _jit(
+                spec_fn, static_argnums=(8,),
+                out_shardings=(self._rep, self._rep, self._arena_sh,
+                               self._darena_sh))
 
             def _prefill_draft(dparams, dqparams, tokens):
                 c = draft.lm.init_cache(1, max_seq, dtype=dt)
@@ -188,7 +319,8 @@ class Engine:
                                         last_logit_only=True)
                 return c
 
-            self._prefill_draft = jax.jit(_prefill_draft)
+            self._prefill_draft = _jit(_prefill_draft,
+                                       out_shardings=self._drow_sh)
 
         def _prefill(params, qparams, tokens):
             caches = lm.init_cache(1, max_seq, dtype=dt)
@@ -226,11 +358,22 @@ class Engine:
                 body, (caches, tok, pos), None, length=k)
             return toks, caches     # toks: (k, B)
 
-        self._prefill = jax.jit(_prefill)
+        self._prefill = _jit(_prefill,
+                             out_shardings=((self._rep, self._row_sh)
+                                            if mesh is not None else None))
+        # _insert serves both arenas (target rows AND draft rows share the
+        # one jit, keyed by avals) so it can't pin a single out_shardings
+        # tree; dynamic_update_slice propagates the operand's sharding,
+        # which is exactly what we want
         self._insert = jax.jit(_insert)
-        self._decode = jax.jit(_decode)
+        self._decode = _jit(_decode,
+                            out_shardings=((self._rep, self._arena_sh)
+                                           if mesh is not None else None))
         # one compile per distinct window length (static scan trip count)
-        self._decode_window = jax.jit(_decode_window, static_argnums=(5,))
+        self._decode_window = _jit(
+            _decode_window, static_argnums=(5,),
+            out_shardings=((self._rep, self._arena_sh)
+                           if mesh is not None else None))
 
         if self.paged:
             P = self.page_size
@@ -242,7 +385,7 @@ class Engine:
                 return model_layers.PagedView(table=pt, page_size=P,
                                               seq_len=max_seq, kv_bits=kvb)
 
-            def make_insert_pages(kv, state):
+            def make_insert_pages(kv, state, out_sh=None):
                 # scatter a fresh (1, max_seq) prefill cache into the
                 # slot's first npp physical pages (whole-page writes: the
                 # prefill's zero tail keeps page remainders zero), and
@@ -272,9 +415,9 @@ class Engine:
                         new[sk] = jax.lax.dynamic_update_slice(
                             c, row[sk].astype(c.dtype), idx)
                     return new
-                return jax.jit(ins, static_argnums=(4,))
+                return _jit(ins, static_argnums=(4,), out_shardings=out_sh)
 
-            def make_zero_pages(kv):
+            def make_zero_pages(kv, out_sh=None):
                 def zero(caches, ids):
                     new = dict(caches)
                     for kk in kv:
@@ -285,9 +428,9 @@ class Engine:
                             new[sk] = caches[sk].at[:, ids].set(
                                 jnp.zeros((), caches[sk].dtype))
                     return new
-                return jax.jit(zero)
+                return _jit(zero, out_shardings=out_sh)
 
-            def make_copy_page(kv):
+            def make_copy_page(kv, out_sh=None):
                 def cp(caches, src, dst):
                     new = dict(caches)
                     for kk in kv:
@@ -297,7 +440,7 @@ class Engine:
                             new[sk] = caches[sk].at[:, dst].set(
                                 caches[sk][:, src])
                     return new
-                return jax.jit(cp)
+                return _jit(cp, out_shardings=out_sh)
 
             def _decode_paged(params, qparams, caches, tok, pos, pt):
                 logits, caches = lm.decode_step(params, qparams, caches, tok,
@@ -321,19 +464,28 @@ class Engine:
                     body, (caches, tok, pos), None, length=k)
                 return toks, caches
 
-            self._insert_pages = make_insert_pages(kv_keys, state_keys)
-            self._zero_pages = make_zero_pages(kv_keys)
-            self._copy_page = make_copy_page(kv_keys)
-            self._decode_paged = jax.jit(_decode_paged)
-            self._decode_window_paged = jax.jit(_decode_window_paged,
-                                                static_argnums=(6,))
+            self._insert_pages = make_insert_pages(kv_keys, state_keys,
+                                                   self._arena_sh)
+            self._zero_pages = make_zero_pages(kv_keys, self._arena_sh)
+            self._copy_page = make_copy_page(kv_keys, self._arena_sh)
+            self._decode_paged = _jit(
+                _decode_paged,
+                out_shardings=((self._rep, self._arena_sh)
+                               if mesh is not None else None))
+            self._decode_window_paged = _jit(
+                _decode_window_paged, static_argnums=(6,),
+                out_shardings=((self._rep, self._arena_sh)
+                               if mesh is not None else None))
 
             if draft is not None:
                 dkv_keys, dstate_keys = _kv_split(self.dcaches)
                 self._insert_pages_d = make_insert_pages(dkv_keys,
-                                                         dstate_keys)
-                self._zero_pages_d = make_zero_pages(dkv_keys)
-                self._copy_page_d = make_copy_page(dkv_keys)
+                                                         dstate_keys,
+                                                         self._darena_sh)
+                self._zero_pages_d = make_zero_pages(dkv_keys,
+                                                     self._darena_sh)
+                self._copy_page_d = make_copy_page(dkv_keys,
+                                                   self._darena_sh)
 
                 def make_gather(kv, state):
                     # materialize each slot's contiguous (max_seq-row)
@@ -409,7 +561,60 @@ class Engine:
                     dc = dscatter(dc, dv, pt, pos, k)
                     return tgt, ncm, tc, dc
 
-                self._spec_paged = jax.jit(_spec_paged, static_argnums=(9,))
+                self._spec_paged = _jit(
+                    _spec_paged, static_argnums=(9,),
+                    out_shardings=(self._rep, self._rep, self._arena_sh,
+                                   self._darena_sh))
+
+        # --- step scheduling policy + chunked-prefill staging ----------
+        from repro.launch.scheduler import OneShotScheduler
+        self.scheduler = scheduler if scheduler is not None \
+            else OneShotScheduler()
+        self._handoff: deque = deque()     # (req, first_token, row) staged
+        self._prefill_job = None           # scheduler.PrefillJob in flight
+        chunk = getattr(self.scheduler, "chunk", None)
+        self._chunk = int(chunk) if chunk else None
+
+        def _fresh_row():
+            row = lm.init_cache(1, max_seq, dtype=dt)
+            if mesh_ is not None:
+                row = jax.device_put(row, self._row_sh)
+            return row
+
+        self._fresh_row = _fresh_row
+        if self._chunk:
+            # chunked prefill stages through LM.verify_chunk (absolute
+            # positions into an existing cache), which carries the same
+            # preconditions as speculative rollback
+            if cfg.window > 0:
+                raise ValueError(
+                    "chunked prefill needs full (window == 0) KV arenas: "
+                    "verify_chunk writes at absolute positions and a ring "
+                    "wrap would fold chunk rows onto each other")
+            bad = sorted({s.mixer for s in lm.plan if s.mixer != "attn"})
+            if bad:
+                raise ValueError(
+                    f"chunked prefill needs attention mixers everywhere "
+                    f"(each chunk resumes from cache rows alone); plan "
+                    f"has {bad} layers with recurrent state that one-shot "
+                    f"prefill threads internally")
+
+            def _prefill_chunk(params, qparams, caches, tokens, pos):
+                # verify_chunk semantics: tokens[:, 0] is the first
+                # uncommitted prompt row, K/V land at rows
+                # [pos, pos+T), and logits[:, -1] predicts the token
+                # after the last fed row — on the final chunk that IS the
+                # request's first generated token, same as _prefill's
+                logits, caches = lm.verify_chunk(params, qparams, caches,
+                                                 tokens, pos,
+                                                 last_logit_only=True)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return nxt, caches
+
+            self._prefill_chunk = _jit(
+                _prefill_chunk,
+                out_shardings=((self._rep, self._row_sh)
+                               if mesh_ is not None else None))
 
     # ------------------------------------------------------------- requests
     def submit(self, prompt, max_new_tokens: int) -> int:
@@ -446,7 +651,8 @@ class Engine:
 
     @property
     def pending(self) -> bool:
-        return bool(self.queue) or self.n_active > 0
+        return (bool(self.queue) or self.n_active > 0
+                or self._prefill_job is not None or bool(self._handoff))
 
     # ------------------------------------------------------------ lifecycle
     def _admit(self) -> int:
@@ -544,10 +750,16 @@ class Engine:
             self._flush_dirty()
         return True
 
-    def _admit_paged(self, req: Request, slot: int) -> Optional[bool]:
+    def _admit_paged(self, req: Request, slot: int,
+                     prefilled=None) -> Optional[bool]:
         """Admit one request into `slot` under the paged arena. Returns
         True (occupies the slot), False (finished at admission — retry
-        the slot), or None (allocator pressure — requeue)."""
+        the slot), or None (allocator pressure — requeue).
+
+        `prefilled=(first_token, row_cache)` supplies an already-staged
+        chunked prefill (the handoff path): the prefill dispatch and its
+        stats are skipped, everything downstream — page scatter, draft
+        prefill, prefix-cache registration — runs identically."""
         P = self.page_size
         S = int(req.prompt.size)
         npg_req = paging.pages_for_rows(S + req.max_new_tokens - 1, P)
@@ -562,6 +774,8 @@ class Engine:
             if ent is not None:
                 first = int(ent.first_token)
                 self.stats["prefix_hits"] += 1
+            elif prefilled is not None:
+                first = int(prefilled[0])
             else:
                 t0 = time.time()
                 nxt, _ = self._prefill(self.params, self.qparams,
@@ -600,13 +814,17 @@ class Engine:
                 return None
             pages = self.alloc.alloc(npg_req)
             npp = paging.pages_for_rows(S, P)    # pages the prompt covers
-            t0 = time.time()
-            nxt, row = self._prefill(self.params, self.qparams,
-                                     jnp.asarray(req.prompt)[None])
-            first = int(jax.block_until_ready(nxt)[0])
-            self.stats["prefill_s"] += time.time() - t0
-            self.stats["prefills"] += 1
-            self.stats["prefill_tokens"] += S
+            if prefilled is not None:
+                first, row = prefilled
+                first = int(first)
+            else:
+                t0 = time.time()
+                nxt, row = self._prefill(self.params, self.qparams,
+                                         jnp.asarray(req.prompt)[None])
+                first = int(jax.block_until_ready(nxt)[0])
+                self.stats["prefill_s"] += time.time() - t0
+                self.stats["prefills"] += 1
+                self.stats["prefill_tokens"] += S
             phys = jnp.asarray(np.asarray(pages[:npp], np.int32))
             self.caches = self._insert_pages(self.caches, row,
                                              jnp.int32(slot), phys, npp)
@@ -680,11 +898,24 @@ class Engine:
         self.done[req.rid] = req
 
     def step(self) -> bool:
-        """One engine iteration: admit into free slots, then one batched
-        decode over every active slot — or, with a draft attached, one
-        speculative draft/verify round committing 1..k_eff+1 tokens per
-        slot. Returns False when idle."""
-        self._admit()
+        """One engine iteration, shaped by the scheduler policy: the
+        policy plans an ordered action tuple ("admit", "handoff",
+        "prefill_chunk", "decode") and the engine executes it. The default
+        OneShotScheduler plans ("admit", "decode") — the classic
+        iteration, verbatim. Returns False when no action made progress
+        (idle)."""
+        progress = False
+        for act in self.scheduler.plan_step(self):
+            progress = bool(getattr(self, "_act_" + act)()) or progress
+        return progress
+
+    def _act_admit(self) -> bool:
+        return self._admit() > 0
+
+    def _act_decode(self) -> bool:
+        """One batched decode over every active slot — or, with a draft
+        attached, one speculative draft/verify round committing
+        1..k_eff+1 tokens per slot."""
         if self.n_active == 0:
             return False
         if self.draft is not None:
@@ -702,6 +933,11 @@ class Engine:
         nxt = np.asarray(jax.block_until_ready(nxt))
         self.stats["decode_s"] += time.time() - t0
         self.stats["decode_steps"] += 1
+        if self._prefill_job is not None:
+            # the disaggregation liveness stat: decode batches that ran
+            # while a prompt was mid-prefill. The one-shot engine's value
+            # is identically zero — it cannot decode during a prefill.
+            self.stats["decode_steps_mid_prefill"] += 1
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
@@ -712,6 +948,118 @@ class Engine:
             if req.done:
                 self._finish(req)
         return True
+
+    # ------------------------------------------------- chunked prefill path
+    def _act_prefill_chunk(self) -> bool:
+        """Advance the in-flight prefill by one chunk (starting a new job
+        from the queue when none is in flight). A finished job moves to
+        the handoff queue with its staged row cache and memoized first
+        token; a paged prefix-cache hit skips staging entirely and hands
+        off immediately."""
+        if self._prefill_job is None:
+            if not self.queue or len(self._handoff) >= self.max_slots:
+                return False
+            req = self.queue.popleft()
+            if (self.paged and self.prefix_cache is not None
+                    and self.prefix_cache.lookup(req.prompt) is not None):
+                # hot prompt: pages and first token are already pinned —
+                # no prefill work at all, _admit_paged redoes the lookup
+                self._handoff.append((req, None, None))
+                return True
+            from repro.launch.scheduler import PrefillJob, chunk_plan
+            self._prefill_job = PrefillJob(
+                req=req, caches=self._fresh_row(),
+                chunks=chunk_plan(int(req.prompt.size), self._chunk))
+        job = self._prefill_job
+        c = job.chunks.pop(0)
+        toks = jnp.asarray(
+            job.req.prompt[job.done_rows:job.done_rows + c])[None]
+        t0 = time.time()
+        nxt, job.caches = self._prefill_chunk(
+            self.params, self.qparams, job.caches, toks,
+            jnp.full((1,), job.done_rows, jnp.int32))
+        first = int(jax.block_until_ready(nxt)[0])
+        self.stats["prefill_s"] += time.time() - t0
+        self.stats["prefill_chunks"] += 1
+        job.done_rows += c
+        if not job.chunks:
+            job.first = first       # the request's first generated token
+            self.stats["prefills"] += 1
+            self.stats["chunked_prefills"] += 1
+            self.stats["prefill_tokens"] += int(job.req.prompt.size)
+            self._handoff.append((job.req, job.first, job.caches))
+            self._prefill_job = None
+        return True
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _act_handoff(self) -> bool:
+        """Admit finished prefill jobs from the handoff queue into free
+        slots — the KV handoff. A staged row inserts exactly like the
+        one-shot path's fresh prefill row, so decode state is identical
+        from the first step. Stops at the first entry that cannot place
+        (no free slot / allocator pressure), preserving FIFO order."""
+        progress = False
+        if self.paged:
+            self._flush_dirty()
+        while self._handoff:
+            req, first, row = self._handoff[0]
+            if self.paged:
+                slot = self._free_slot()
+                if req.max_new_tokens > 1 and slot is None:
+                    break
+                got = self._admit_paged(
+                    req, -1 if slot is None else slot,
+                    prefilled=None if first is None else (first, row))
+                if got is None:
+                    break
+            elif req.max_new_tokens == 1:
+                # one-token request: the staged first token IS the answer
+                self.stats["admitted"] += 1
+                req.admit_t = time.time()
+                req.tokens.append(int(first))
+                self._finish(req)
+            else:
+                slot = self._free_slot()
+                if slot is None:
+                    break
+                self._insert_staged(req, int(first), row, slot)
+            self._handoff.popleft()
+            progress = True
+        return progress
+
+    def _insert_staged(self, req: Request, first: int, row, slot: int
+                       ) -> None:
+        """Contiguous-arena tail of admission from a staged row cache:
+        the one-shot path's post-prefill bookkeeping, reused verbatim by
+        the handoff queue."""
+        self.caches = self._insert(self.caches, row, jnp.int32(slot))
+        if self.draft is not None:
+            # the draft arena still prefills one-shot at handoff (its
+            # sliced shapes make this the cheap half); chunking the draft
+            # too would need a second staging row per job
+            t1 = time.time()
+            drow = self._prefill_draft(self.draft.params,
+                                       self.draft.qparams,
+                                       jnp.asarray(req.prompt)[None])
+            self.dcaches = self._insert(self.dcaches, drow,
+                                        jnp.int32(slot))
+            jax.block_until_ready(
+                jax.tree_util.tree_leaves(self.dcaches)[0])
+            self.stats["draft_prefill_s"] += time.time() - t1
+            self.stats["draft_prefills"] += 1
+            self.stats["draft_prefill_tokens"] += int(req.prompt.size)
+        self.stats["admitted"] += 1
+        req.admit_t = time.time()
+        req.tokens.append(first)
+        self.pos[slot] = req.prompt.size
+        self.last_tok[slot] = first
+        req.slot = slot
+        self.active[slot] = req
 
     def _spec_ks(self) -> list[int]:
         """Draft-window lengths the speculative path can dispatch at:
@@ -788,7 +1136,15 @@ class Engine:
         With a draft attached, the speculative step compiles instead —
         one spec-step per k in `_spec_ks()` (the k_eff quantization
         guarantees no other shape can be dispatched) plus the draft's own
-        prefills — so the compiled-shape set stays bounded either way."""
+        prefills — so the compiled-shape set stays bounded either way.
+
+        A chunked-prefill engine warms a different set: the single-step
+        decode (its `run()` drives `step()`, never the window family) and
+        one `_prefill_chunk` compile per bucket in
+        `chunk_buckets(chunk)` — `chunk_plan`'s pow2 remainder
+        decomposition guarantees no prompt length can dispatch any other
+        chunk shape, so the compile set is bounded by the chunk size, not
+        the workload's prompt lengths."""
         tok = jnp.zeros((self.max_slots, 1), jnp.int32)
         pos = jnp.zeros((self.max_slots,), jnp.int32)
         pt = jnp.asarray(self.page_table) if self.paged else None
@@ -805,6 +1161,14 @@ class Engine:
                         self.draft.qparams, self.caches, self.dcaches,
                         tok, pos, k)
                 jax.block_until_ready(tgt)
+        elif self._chunk:
+            if self.paged:
+                nxt, _ = self._decode_paged(self.params, self.qparams,
+                                            self.caches, tok, pos, pt)
+            else:
+                nxt, _ = self._decode(self.params, self.qparams,
+                                      self.caches, tok, pos)
+            jax.block_until_ready(nxt)
         else:
             k = 1
             while k <= self.MAX_WINDOW:
@@ -817,6 +1181,22 @@ class Engine:
                                                   self.caches, tok, pos, k)
                 jax.block_until_ready(toks)
                 k *= 2
+        if self._chunk:
+            from repro.launch.scheduler import chunk_buckets
+            row = self._fresh_row()
+            for c in chunk_buckets(self._chunk):
+                nxt, row = self._prefill_chunk(
+                    self.params, self.qparams, row,
+                    jnp.zeros((1, c), jnp.int32), jnp.zeros((1,), jnp.int32))
+                jax.block_until_ready(nxt)
+            if self.draft is not None:
+                for n in sorted({req.prompt.size for req in self.queue}):
+                    drow = self._prefill_draft(
+                        self.draft.params, self.draft.qparams,
+                        jnp.zeros((1, int(n)), jnp.int32))
+                    jax.block_until_ready(
+                        jax.tree_util.tree_leaves(drow)[0])
+            return
         # prefill compiles per distinct prompt length; the queued lengths
         # are known, so warm them here instead of inside _admit's timing
         for n in sorted({req.prompt.size for req in self.queue}):
@@ -829,6 +1209,24 @@ class Engine:
                                            jnp.zeros((1, int(n)), jnp.int32))
                 jax.block_until_ready(
                     jax.tree_util.tree_leaves(drow)[0])
+
+    def compile_cache_sizes(self) -> dict[str, int]:
+        """Compiled-entry counts for every engine jit — the warmup
+        contract's regression pin: after `warmup()` + `run()`, a chunked
+        engine's `_prefill_chunk` count must equal
+        `len(chunk_buckets(chunk))` and `_decode`/`_decode_paged` must
+        stay at 1 (tests/test_scheduler.py asserts it), so a shape leak
+        in the chunk plan can't silently recompile mid-serve."""
+        out = {}
+        for name in ("_prefill", "_prefill_chunk", "_insert", "_decode",
+                     "_decode_window", "_decode_paged",
+                     "_decode_window_paged", "_insert_pages",
+                     "_zero_pages", "_copy_page", "_spec", "_spec_paged",
+                     "_prefill_draft"):
+            fn = getattr(self, name, None)
+            if fn is not None and hasattr(fn, "_cache_size"):
+                out[name] = int(fn._cache_size())
+        return out
 
     def _window(self) -> bool:
         """Admit, then decode up to the next scheduled eviction in one
@@ -843,6 +1241,11 @@ class Engine:
                 "speculative engines decode through step(): _window's "
                 "event accounting assumes exactly one token per slot "
                 "per step")
+        if self._chunk:
+            raise RuntimeError(
+                "chunked-prefill engines decode through step(): a fused "
+                "window cannot interleave prefill chunks — it would "
+                "reintroduce the head-of-line block chunking removes")
         self._admit()
         if self.n_active == 0:
             return False
@@ -882,10 +1285,13 @@ class Engine:
         a later drain never re-reports earlier batches. Decodes in
         event-free windows (one dispatch + one host sync per window);
         a speculative engine rounds through `step()` instead — each
-        round already fuses k_eff+1 positions into one dispatch."""
-        drive = self.step if self.draft is not None else self._window
+        round already fuses k_eff+1 positions into one dispatch — and a
+        chunked-prefill engine steps through `step()` so prefill chunks
+        interleave with decode."""
+        drive = (self.step if (self.draft is not None or self._chunk)
+                 else self._window)
         while self.pending:
-            if not drive() and self.queue:
+            if not drive() and (self.queue or self._handoff):
                 raise RuntimeError("queue stuck with no active slots")
         if self.paged:
             # drain leaves no dirty quarantine behind: every released
@@ -914,7 +1320,18 @@ class Engine:
                                       / max(s["spec_drafted"], 1))
         return out
 
-    def kv_bytes(self) -> int:
+    @staticmethod
+    def _leaf_nbytes(leaf, per_device: bool) -> int:
+        """Bytes of one array — per addressable shard when `per_device`
+        (a TP-sharded leaf stores 1/tp of its rows on each device; a
+        replicated leaf stores all of them everywhere)."""
+        if per_device:
+            shards = getattr(leaf, "addressable_shards", None)
+            if shards:
+                return int(shards[0].data.nbytes)
+        return int(leaf.nbytes)
+
+    def kv_bytes(self, per_device: bool = False) -> int:
         """KV bytes the engine is *using*. A pruned model's arena only
         holds rows for surviving kv heads / mamba channels / rwkv heads
         (LM.init_cache sizes from the SlimPlan shapes), so this shrinks
@@ -923,14 +1340,18 @@ class Engine:
         under-reported every `--speculative` kv_bytes stat. Paged engines
         count only *allocated* pages (live + reserved) pro-rated over the
         pooled leaves, plus state leaves and the page table — the headline
-        stat the ≥2x-concurrency bench leans on."""
+        stat the ≥2x-concurrency bench leans on.
+
+        `per_device` reports one device's share under TP: KV-head-sharded
+        leaves weigh 1/tp, replicated fallbacks weigh full — the
+        ~1/tp-shrink acceptance stat (tests/test_tp_engine.py)."""
         if not self.paged:
-            total = tree_bytes(self.caches)
+            leaves = jax.tree_util.tree_leaves(self.caches)
             if self.dcaches is not None:
-                total += tree_bytes(self.dcaches)
-            return total
+                leaves += jax.tree_util.tree_leaves(self.dcaches)
+            return sum(self._leaf_nbytes(lf, per_device) for lf in leaves)
         n_alloc = self.alloc.n_live + paging.N_RESERVED
-        total = self.page_table.nbytes
+        total = self.page_table.nbytes      # host numpy: replicated
         arenas = [self.caches]
         if self.dcaches is not None:
             arenas.append(self.dcaches)
@@ -938,9 +1359,11 @@ class Engine:
             for key, leaf in caches.items():
                 if (key.endswith(".k") or key.endswith(".v")
                         or key.endswith("_scale")):
-                    total += (leaf.nbytes // self.n_pages) * n_alloc
+                    total += (self._leaf_nbytes(leaf, per_device)
+                              // self.n_pages) * n_alloc
                 else:
-                    total += leaf.nbytes    # mamba/rwkv state: slot-sized
+                    # mamba/rwkv state: slot-sized
+                    total += self._leaf_nbytes(leaf, per_device)
         return total
 
     def kv_pool_bytes(self) -> int:
@@ -955,13 +1378,18 @@ class Engine:
             total += self.page_table.nbytes
         return total
 
-    def param_bytes(self) -> int:
+    def param_bytes(self, per_device: bool = False) -> int:
         """Bytes of the served param dict (codes + scales + dense rest).
 
         Counts the containers as served: a `--packed` engine's sub-byte
         word streams weigh their packed bytes, so this tracks
-        `mean_bits` instead of flooring at the int8 container."""
-        return tree_bytes(self.params)
+        `mean_bits` instead of flooring at the int8 container.
+        `per_device` reports one device's share under TP (sharded leaves
+        weigh 1/tp, replicated fallbacks weigh full)."""
+        if not per_device:
+            return tree_bytes(self.params)
+        return sum(self._leaf_nbytes(lf, True)
+                   for lf in jax.tree_util.tree_leaves(self.params))
 
 
 # ----------------------------------------------------------------- drivers
@@ -975,7 +1403,8 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
                  draft_bits: float = 2.0, paged: bool = False,
                  page_size: int = 16, kv_bits: int | None = None,
                  n_pages: int | None = None,
-                 prefix_sharing: bool = True) -> tuple[Engine, LM]:
+                 prefix_sharing: bool = True, tp: int = 0,
+                 prefill_chunk: int | None = None) -> tuple[Engine, LM]:
     """Init an LM at `arch` scale and wrap it in an Engine.
 
     `pruned` serves the physically sliced subnet: `prepare_serving` builds
@@ -995,12 +1424,18 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
     quantizer-init order, so the draft is GETA-calibrated to the target),
     decoding in draft/verify rounds of up to `draft_k` proposals. The
     output stream stays token-identical to the non-speculative engine —
-    the `--speculative --smoke` parity check asserts it."""
+    the `--speculative --smoke` parity check asserts it.
+
+    `tp > 1` serves tensor-parallel over a (1, tp) device mesh
+    (`make_tp_mesh`): params and KV arena shard per DESIGN.md §4.12, the
+    token stream stays identical to tp=1. `prefill_chunk` swaps in a
+    `ChunkedPrefillScheduler` so prefill interleaves with decode in
+    `prefill_chunk`-row chunks. The two compose."""
     pruned = pruned or keep_masks is not None
     compressed = compressed or packed
     cfg = get_arch(arch, smoke=smoke)
     lm = LM(cfg)
-    params, _ = lm.init(jax.random.PRNGKey(seed))
+    params, axes = lm.init(jax.random.PRNGKey(seed))
     draft = None
     if speculative:
         from repro.launch.speculative import build_draft
@@ -1013,11 +1448,30 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
         lm, params, quantized=quantized, compressed=compressed,
         packed=packed, bits_init=bits_init, keep_masks=keep_masks,
         prune_sparsity=(sparsity if pruned and keep_masks is None else None))
+    mesh = None
+    if tp and tp > 1:
+        from repro.launch.mesh import make_tp_mesh
+        mesh = make_tp_mesh(tp)
+    scheduler = None
+    if prefill_chunk:
+        from repro.launch.scheduler import ChunkedPrefillScheduler
+        scheduler = ChunkedPrefillScheduler(chunk=int(prefill_chunk))
     eng = Engine(lm, params, qparams, max_slots=max_slots, max_seq=max_seq,
                  draft=draft, draft_k=draft_k, paged=paged,
                  page_size=page_size, kv_bits=kv_bits, n_pages=n_pages,
-                 prefix_sharing=prefix_sharing)
+                 prefix_sharing=prefix_sharing, mesh=mesh, param_axes=axes,
+                 scheduler=scheduler)
     meta["kv_bytes"] = eng.kv_bytes()
+    if mesh is not None:
+        meta["tp"] = {
+            "devices": int(tp),
+            "param_bytes_per_device": eng.param_bytes(per_device=True),
+            "kv_bytes_per_device": eng.kv_bytes(per_device=True),
+            "replicated_fallbacks": sorted({n for n, _, _
+                                            in eng.tp_fallbacks}),
+        }
+    if prefill_chunk:
+        meta["prefill_chunk"] = int(prefill_chunk)
     if paged:
         meta["paged"] = {
             "page_size": int(eng.page_size),
@@ -1081,7 +1535,8 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
                  speculative: bool = False, draft_k: int = 4,
                  draft_sparsity: float = 0.5, draft_bits: float = 2.0,
                  paged: bool = False, page_size: int = 16,
-                 kv_bits: int | None = None,
+                 kv_bits: int | None = None, tp: int = 0,
+                 prefill_chunk: int | None = None,
                  stats: dict | None = None) -> dict[int, np.ndarray]:
     """Submit one request per prompt length, run to drain, report tok/s.
 
@@ -1100,7 +1555,8 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
                                speculative=speculative, draft_k=draft_k,
                                draft_sparsity=draft_sparsity,
                                draft_bits=draft_bits, paged=paged,
-                               page_size=page_size, kv_bits=kv_bits)
+                               page_size=page_size, kv_bits=kv_bits,
+                               tp=tp, prefill_chunk=prefill_chunk)
         for p in synthetic_prompts(lm.cfg, prompt_lens, seed):
             eng.submit(p, gen)
         eng.warmup()
@@ -1125,6 +1581,10 @@ def engine_serve(arch: str, smoke: bool, prompt_lens: list[int], gen: int,
             mode += "+paged"
             if kv_bits is not None:
                 mode += f"@kv{kv_bits}"
+        if tp and tp > 1:
+            mode += f"+tp{tp}"
+        if prefill_chunk:
+            mode += f"+chunked@{prefill_chunk}"
         line = (f"{arch} [engine/{mode}]: {len(prompt_lens)} requests "
                 f"({', '.join(str(n) for n in prompt_lens)} prompt tokens, "
                 f"{gen} new each) on {max_slots} slots — "

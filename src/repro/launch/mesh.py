@@ -56,3 +56,20 @@ def make_subset_mesh(n: int, axes=("data", "model")):
         raise ValueError(f"requested {n} devices, host has {len(devs)}")
     return jax.sharding.Mesh(
         np.asarray(devs[:n]).reshape((n, 1)), axes)
+
+
+def make_tp_mesh(n: int, axes=("data", "model")):
+    """A (1, n) mesh over the FIRST n local devices — `model` carries n.
+
+    The serving-engine complement of `make_subset_mesh` (which is
+    data-major for DP/FSDP training): the TP engine shards attention
+    heads / MLP hidden / the KV arena over `model`, and decode batches are
+    tiny, so the whole device budget goes to tensor parallelism. Built
+    directly from a device subset for the same reason as above — parity
+    tests hold a 1-device reference engine and an n-device engine in one
+    process."""
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(f"requested {n} devices, host has {len(devs)}")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape((1, n)), axes)

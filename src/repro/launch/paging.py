@@ -38,6 +38,13 @@ Two physical pages are reserved: page 0 is the permanent ZERO page
 unwritten tail are bitwise zero) and page 1 is the TRASH page (idle
 slots' decode writes land there — the engine decodes all slots every
 step, and an idle slot must not be able to corrupt page 0).
+
+Under tensor-parallel serving (DESIGN.md §4.12) this split is what
+makes the paged arena shard cleanly: page *payloads* are device-local
+(the pools shard on their KV-head axis when `KVh % tp == 0`), while
+everything in this module — page tables, free lists, refcounts, the
+prefix cache — is control plane, host-side and identical regardless of
+mesh size, so the allocator never needs to know a mesh exists.
 """
 from __future__ import annotations
 

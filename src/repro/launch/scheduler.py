@@ -1,0 +1,122 @@
+"""Swappable step-scheduling policies for the serving engine.
+
+`Engine.step()` used to hard-code one iteration shape: admit (one-shot
+full-prompt prefills into free slots), then one batched decode. That
+coupling is what made long prompts head-of-line-block decode — a 2048-row
+prefill is one dispatch the whole engine waits on while every active slot
+sits idle. This module extracts the per-step decision into a policy
+object the engine consults each `step()`:
+
+  * `OneShotScheduler` — the original behavior, verbatim: plan is always
+    ("admit", "decode"). The default; every pre-existing engine test pins
+    its semantics.
+  * `ChunkedPrefillScheduler(chunk)` — disaggregated prefill/decode: the
+    prompt is prefilled `chunk` rows at a time into a *staging* row cache
+    (a `PrefillJob`), interleaved with decode steps over the active
+    slots, and finished jobs hand their KV off to a free slot through the
+    engine's handoff queue. Decode latency stays bounded by one chunk,
+    not one prompt.
+
+A policy is just `plan_step(engine) -> tuple[str, ...]` over the action
+vocabulary the engine executes in order: "admit", "handoff",
+"prefill_chunk", "decode". Policies read engine state but never mutate
+it; actions with nothing to do are cheap no-ops, so a policy may
+over-plan. Policies carrying a `chunk` attribute switch the engine into
+chunked mode at construction (staging machinery, chunk-bucket warmup,
+`run()` driving `step()` instead of the fused window).
+
+The chunk plan keeps the compiled-shape set bounded the same way the
+speculative path bounds its k set: a length-S prompt splits into S//C
+full chunks plus a *descending power-of-two decomposition* of the
+remainder — never padded (arena rows beyond the written prefix must stay
+bitwise zero; speculative rollback and the paged pools both lean on
+that) — so every possible dispatch shape is in `chunk_buckets(C)` =
+{C} ∪ {2^i : 2^i < C}, which `warmup()` precompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def chunk_plan(s: int, chunk: int) -> list[int]:
+    """Chunk lengths for a length-`s` prompt at chunk size `chunk`:
+    full chunks first, then the remainder as descending powers of two
+    (21 @ 16 -> [16, 4, 1]). Sums to exactly `s`."""
+    if s < 1:
+        raise ValueError(f"prompt length must be >= 1, got {s}")
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    out = [chunk] * (s // chunk)
+    r = s % chunk
+    while r:
+        b = 1 << (r.bit_length() - 1)
+        out.append(b)
+        r -= b
+    return out
+
+
+def chunk_buckets(chunk: int) -> list[int]:
+    """Every chunk length `chunk_plan` can emit: {chunk} ∪ {2^i < chunk}.
+    The warmup contract — one prefill-chunk compile per bucket, and no
+    prompt length can dispatch any other shape."""
+    out = {int(chunk)}
+    b = 1
+    while b < chunk:
+        out.add(b)
+        b *= 2
+    return sorted(out)
+
+
+@dataclasses.dataclass
+class PrefillJob:
+    """A prompt mid-prefill: the staging row cache being filled chunk by
+    chunk, the chunk lengths still to run, and — once the last chunk
+    lands — the memoized first output token. Exactly one job is in
+    flight at a time (prefill is serialized; decode is what must not
+    starve)."""
+    req: object                        # engine.Request
+    caches: object                     # fresh (1, max_seq) row cache
+    chunks: list[int]                  # remaining chunk lengths
+    done_rows: int = 0                 # prompt rows already written
+    first: Optional[int] = None        # set when the last chunk lands
+
+
+@dataclasses.dataclass(frozen=True)
+class OneShotScheduler:
+    """The classic engine iteration: admit with one-shot full-prompt
+    prefills, then one batched decode (or speculative round)."""
+    chunk = None    # not a chunked policy
+
+    def plan_step(self, eng) -> tuple[str, ...]:
+        return ("admit", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedPrefillScheduler:
+    """Disaggregated prefill/decode: every step advances the in-flight
+    prefill by at most one chunk AND runs one decode batch, so decode
+    tail latency is bounded by a chunk, not a prompt. Finished prefills
+    queue on the engine's handoff deque until a slot frees (capped at
+    max_slots staged jobs so staging can't grow unboundedly under slot
+    pressure)."""
+    chunk: int = 16
+
+    def __post_init__(self):
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+
+    def plan_step(self, eng) -> tuple[str, ...]:
+        acts = []
+        if eng._handoff:
+            acts.append("handoff")
+        if eng._prefill_job is not None or (
+                eng.queue and len(eng._handoff) < eng.max_slots):
+            acts.append("prefill_chunk")
+        # plan decode when a handoff is pending too: the handoff action
+        # runs first, so a freshly-admitted slot decodes this same step
+        # instead of idling one iteration (the decode action no-ops if
+        # admission couldn't place anything)
+        if eng.n_active or eng._handoff:
+            acts.append("decode")
+        return tuple(acts)

@@ -343,6 +343,108 @@ def paged_parity_check(arch: str, smoke: bool, prompt_lens: list[int],
     return got
 
 
+def tp_parity_check(arch: str, smoke: bool, prompt_lens: list[int],
+                    gen: int, *, tp: int, quantized: bool = True,
+                    compressed: bool = False, packed: bool = False,
+                    pruned: bool = False, sparsity: float = 0.5,
+                    bits_init: float = 8.0, speculative: bool = False,
+                    draft_k: int = 4, draft_sparsity: float = 0.5,
+                    draft_bits: float = 2.0, paged: bool = False,
+                    page_size: int = 16, prefill_chunk: int | None = None,
+                    max_slots: int, seed: int = 0,
+                    verbose: bool = True) -> dict:
+    """Assert the tensor-parallel engine's decode is token-identical to
+    the single-device engine on the same weights/prompts/seed.
+
+    TP sharding is column/head-parallel by construction (DESIGN.md
+    §4.12): every output column and KV head lives wholly on one device,
+    so no contraction is ever split across devices and no cross-device
+    reduction reassociates a sum — greedy argmaxes must match bit for
+    bit, across the whole compression stack. Raises AssertionError on
+    divergence — the CI smoke for `serve --tp N --smoke`. Returns the TP
+    arm's output (the run that printed the throughput report), and
+    reports any shapes the mesh couldn't divide (replication
+    fallbacks)."""
+    import numpy as np
+
+    from repro.launch.engine import engine_serve
+    common = dict(quantized=quantized, compressed=compressed, packed=packed,
+                  pruned=pruned, sparsity=sparsity, bits_init=bits_init,
+                  speculative=speculative, draft_k=draft_k,
+                  draft_sparsity=draft_sparsity, draft_bits=draft_bits,
+                  paged=paged, page_size=page_size,
+                  prefill_chunk=prefill_chunk, max_slots=max_slots,
+                  seed=seed)
+    want = engine_serve(arch, smoke, prompt_lens, gen, verbose=False,
+                        **common)
+    st: dict = {}
+    got = engine_serve(arch, smoke, prompt_lens, gen, verbose=verbose,
+                       tp=tp, stats=st, **common)
+    assert sorted(got) == sorted(want), (sorted(got), sorted(want))
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"tp={tp} decode diverged from the single-device "
+                    f"engine (request {rid})")
+    mode = ("packed" if packed else
+            "compressed" if compressed else "dense")
+    if pruned:
+        mode += f"+pruned@{sparsity:.2f}"
+    if paged:
+        mode += "+paged"
+    if speculative:
+        mode += f"+spec(k={draft_k})"
+    print(f"{arch}: tp={tp} decode token-identical to the single-device "
+          f"engine over {len(want)} requests ({mode})")
+    return got
+
+
+def chunked_prefill_parity_check(arch: str, smoke: bool,
+                                 prompt_lens: list[int], gen: int, *,
+                                 prefill_chunk: int, quantized: bool = True,
+                                 compressed: bool = False,
+                                 packed: bool = False, pruned: bool = False,
+                                 sparsity: float = 0.5,
+                                 bits_init: float = 8.0, tp: int = 0,
+                                 max_slots: int, seed: int = 0,
+                                 verbose: bool = True) -> dict:
+    """Assert the chunked-prefill engine's decode is token-identical to
+    the one-shot-prefill engine, and that decode actually ran while a
+    prefill was in flight (`decode_steps_mid_prefill > 0` whenever a
+    multi-chunk prompt and an active slot coexisted) — the
+    disaggregation is only worth its machinery if both hold. Raises
+    AssertionError on divergence — the CI smoke for
+    `serve --chunked-prefill N --smoke`. Returns the chunked arm's
+    output (the run that printed the throughput report)."""
+    import numpy as np
+
+    from repro.launch.engine import engine_serve
+    common = dict(quantized=quantized, compressed=compressed, packed=packed,
+                  pruned=pruned, sparsity=sparsity, bits_init=bits_init,
+                  tp=tp, max_slots=max_slots, seed=seed)
+    want = engine_serve(arch, smoke, prompt_lens, gen, verbose=False,
+                        **common)
+    st: dict = {}
+    got = engine_serve(arch, smoke, prompt_lens, gen, verbose=verbose,
+                       prefill_chunk=prefill_chunk, stats=st, **common)
+    assert sorted(got) == sorted(want), (sorted(got), sorted(want))
+    for rid in want:
+        np.testing.assert_array_equal(
+            got[rid], want[rid],
+            err_msg=f"chunked prefill (chunk={prefill_chunk}) diverged "
+                    f"from the one-shot engine (request {rid})")
+    if len(prompt_lens) > 1 and any(n > prefill_chunk
+                                    for n in prompt_lens[1:]):
+        # a later prompt needed several chunks while request 0 decoded,
+        # so disaggregation must have interleaved at least once
+        assert st["decode_steps_mid_prefill"] > 0, st
+    print(f"{arch}: chunked prefill (chunk={prefill_chunk}) "
+          f"token-identical to the one-shot engine over {len(want)} "
+          f"requests; {st['prefill_chunks']} chunks, "
+          f"{st['decode_steps_mid_prefill']} decode steps ran mid-prefill")
+    return got
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -422,6 +524,26 @@ def main():
                          "decoded in-VMEM by the flash-decode kernel "
                          "(approximate numerics: skips the --smoke "
                          "token-identity check)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="engine mode: tensor-parallel serving over a "
+                         "(1, N) device mesh — params shard by attention "
+                         "head / MLP hidden / vocab, the KV arena by KV "
+                         "head (DESIGN.md §4.12); in --smoke mode also "
+                         "asserts decode tokens are identical to the "
+                         "single-device engine")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N XLA host-platform devices (CPU only; "
+                         "sets --xla_force_host_platform_device_count "
+                         "before the backend initializes) so --tp runs "
+                         "on a single-CPU host")
+    ap.add_argument("--chunked-prefill", type=int, default=None,
+                    metavar="CHUNK",
+                    help="engine mode: split each prompt's prefill into "
+                         "CHUNK-row chunks interleaved with decode steps "
+                         "(disaggregated prefill/decode — long prompts "
+                         "stop head-of-line-blocking active slots); in "
+                         "--smoke mode also asserts decode tokens are "
+                         "identical to the one-shot engine")
     ap.add_argument("--no-decode-attn", dest="decode_attn",
                     action="store_false", default=True,
                     help="disable the fused flash-decode attention kernel "
@@ -434,6 +556,16 @@ def main():
                          "tokens are identical (the decode-attn CI smoke; "
                          "honors --compressed/--packed/--pruned)")
     args = ap.parse_args()
+    if args.devices and args.devices > 1:
+        # must land before the first backend touch; harmless if XLA is
+        # already up with enough devices, fatal (jax raises in
+        # make_tp_mesh) if it's up with fewer
+        import os
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count="
+                        f"{args.devices}").strip()
     if not args.decode_attn:
         from repro.models.layers import set_decode_attn
         set_decode_attn(False)
@@ -464,6 +596,31 @@ def main():
     # `--draft-sparsity 50` and `--draft-sparsity 0.5` mean the same thing
     draft_sparsity = (args.draft_sparsity / 100.0
                       if args.draft_sparsity > 1.0 else args.draft_sparsity)
+    if args.tp and args.tp > 1 and args.smoke:
+        # CI smoke contract: N-device decode == 1-device decode, token
+        # for token, across whatever compression/paged/speculative stack
+        # is active — the `serve --tp --smoke` parity step.
+        tp_parity_check(args.arch, args.smoke, lens, args.gen,
+                        tp=args.tp, quantized=args.quantized,
+                        compressed=args.compressed, packed=args.packed,
+                        pruned=args.pruned, sparsity=args.sparsity,
+                        bits_init=args.bits, speculative=args.speculative,
+                        draft_k=args.draft_k, draft_sparsity=draft_sparsity,
+                        draft_bits=args.draft_bits, paged=args.paged,
+                        page_size=args.page_size,
+                        prefill_chunk=args.chunked_prefill,
+                        max_slots=args.slots)
+        return
+    if args.chunked_prefill and args.smoke:
+        # CI smoke contract: chunked prefill == one-shot prefill, token
+        # for token, AND decode steps demonstrably ran mid-prefill.
+        chunked_prefill_parity_check(
+            args.arch, args.smoke, lens, args.gen,
+            prefill_chunk=args.chunked_prefill, quantized=args.quantized,
+            compressed=args.compressed, packed=args.packed,
+            pruned=args.pruned, sparsity=args.sparsity,
+            bits_init=args.bits, tp=args.tp, max_slots=args.slots)
+        return
     if args.paged and args.smoke and args.kv_bits is None:
         # CI smoke contract: paged decode == contiguous decode, token for
         # token, across whatever compression/speculative stack is active.
@@ -530,7 +687,8 @@ def main():
                  max_slots=args.slots, speculative=args.speculative,
                  draft_k=args.draft_k, draft_sparsity=draft_sparsity,
                  draft_bits=args.draft_bits, paged=args.paged,
-                 page_size=args.page_size, kv_bits=args.kv_bits)
+                 page_size=args.page_size, kv_bits=args.kv_bits,
+                 tp=args.tp, prefill_chunk=args.chunked_prefill)
 
 
 if __name__ == "__main__":

@@ -9,6 +9,11 @@ Conventions:
 - activations in cfg.dtype (bf16 default); softmax/norm/SSM state in f32.
 - every init_* returns (params, axes) where axes maps each param to a tuple
   of *logical* axis names consumed by repro.distributed.sharding.
+  Those names also drive tensor-parallel *serving* (DESIGN.md §4.12):
+  `make_plan(mode="tp")` shards the head / mlp / vocab axes over the mesh's
+  "model" axis, and `serving_axes_for` extends the mapping to the derived
+  `.codes` / `.packed{bits}` / `.scale` leaves compressed serving adds —
+  layer code never changes, GSPMD partitions the same einsums.
 """
 from __future__ import annotations
 

@@ -592,7 +592,8 @@ class LM:
         return logits, new_caches
 
     def verify_chunk(self, params: dict, qparams: Optional[dict],
-                     caches: dict, tokens, pos):
+                     caches: dict, tokens, pos,
+                     last_logit_only: bool = False):
         """Score a T-token chunk mid-sequence against the live caches —
         the speculative verify pass. tokens: (B, T) where column 0 is the
         last committed token of each slot and columns 1..T-1 are draft
@@ -606,7 +607,10 @@ class LM:
         that a rejected suffix cannot roll back (KV rows can be zeroed;
         an SSM state cannot be un-stepped). Full (window == 0) arenas
         only, for the same reason — ring wrap overwrites history.
-        Returns (logits (B, T, V), new_caches)."""
+        Returns (logits (B, T, V), new_caches); `last_logit_only` projects
+        just the final position through the head, like prefill's — the
+        engine's chunked prefill only feeds on the last chunk's last
+        position, so every earlier head GEMM would be dead work."""
         cfg = self.cfg
         bad = [sub.mixer for sub in self.plan if sub.mixer != "attn"]
         if bad:
@@ -668,6 +672,8 @@ class LM:
                           for k in new_list[0]}
         else:
             x, new_caches = jax.lax.scan(body, x, {"p": bp, "c": caches})
+        if last_logit_only:
+            x = x[:, -1:]
         x = Lyr.rmsnorm(x, params["final_norm"], cfg.norm_eps)
         logits = self._head(params, x)
         return logits, new_caches

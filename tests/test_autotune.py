@@ -1,0 +1,135 @@
+"""GEMM block-size autotuner tier (PR 9 satellite).
+
+Pins the tuner's three contracts: the per-shape table round-trips
+through the ``REPRO_GEMM_TUNE_CACHE`` JSON file (tune once, every later
+process starts warm), a corrupt or missing file can never break serving
+(lookup degrades to `DEFAULT_BLOCKS`), and `autotune_gemm` records a
+winner that the very next `gemm(..., blocks=None)` trace picks up while
+staying bitwise-correct against the xla-ref oracle.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, gemm_core
+
+
+@pytest.fixture(autouse=True)
+def _hermetic(monkeypatch):
+    """Every test starts with an empty in-memory table and no cache file
+    env var; opt in per-test with monkeypatch.setenv."""
+    monkeypatch.delenv(autotune.ENV_VAR, raising=False)
+    autotune.clear()
+    yield
+    autotune.clear()
+
+
+def test_ops_key_names_epilogue():
+    assert autotune.ops_key(()) == "dense"
+    mask = jnp.ones((8,), jnp.float32)
+    scale = jnp.ones((8,), jnp.float32)
+    assert autotune.ops_key((gemm_core.col_mask(mask),)) == "col_mask"
+    assert autotune.ops_key(
+        (gemm_core.dequant(scale), gemm_core.col_mask(mask))
+    ) == "dequant+col_mask"
+    # packed streams encode the bit width — a 4-bit and an 8-bit GEMM of
+    # the same shape tune independently
+    k4 = autotune.ops_key((gemm_core.unpack_dequant(4, scale),))
+    k8 = autotune.ops_key((gemm_core.unpack_dequant(8, scale),))
+    assert k4 != k8
+
+
+def test_record_lookup_roundtrip_in_memory():
+    assert autotune.lookup(8, 128, 64, "dense", "pallas-tpu") is None
+    autotune.record(8, 128, 64, "dense", "pallas-tpu", (32, 128, 64))
+    assert autotune.lookup(8, 128, 64, "dense", "pallas-tpu") \
+        == (32, 128, 64)
+    # a different shape / epilogue / backend is a distinct key
+    assert autotune.lookup(8, 128, 64, "col_mask", "pallas-tpu") is None
+    assert autotune.lookup(8, 128, 64, "dense", "pallas-interpret") is None
+    # no env var -> save is a no-op, nothing written anywhere
+    assert autotune.save() is None
+
+
+def test_cache_file_persists_and_reloads(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv(autotune.ENV_VAR, str(path))
+    autotune.record(4, 256, 128, "dense", "pallas-tpu", (32, 256, 128))
+    payload = json.loads(path.read_text())
+    assert payload["format"] == "repro-gemm-tune-v1"
+    assert payload["blocks"]["4x256x128|dense|pallas-tpu"] == [32, 256, 128]
+    # a fresh process (cleared memory) warms itself from the file
+    autotune.clear()
+    assert autotune.lookup(4, 256, 128, "dense", "pallas-tpu") \
+        == (32, 256, 128)
+
+
+def test_corrupt_cache_never_breaks(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    path.write_text("{ this is not json")
+    monkeypatch.setenv(autotune.ENV_VAR, str(path))
+    autotune.clear()
+    assert autotune.lookup(8, 128, 64, "dense", "pallas-tpu") is None
+    # and the default path still serves: blocks=None falls back cleanly
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (4, 32), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (32, 64), jnp.float32)
+    y = gemm_core.gemm(x, w, backend="xla-ref")
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x) @ np.asarray(w), rtol=1e-5)
+
+
+def test_candidate_blocks_clamped_and_deduped():
+    cands = autotune.candidate_blocks(4, 128, 256)
+    assert len(cands) == len(set(cands))
+    for b in cands:
+        # every candidate is a fixed point of the clamp: nothing in the
+        # list can silently retile to another list entry at dispatch
+        assert gemm_core._clamp_blocks(b, 4, 128, 256) == b
+    # a tiny shape collapses the 36-point grid to a handful
+    assert 1 <= len(autotune.candidate_blocks(1, 64, 32)) <= 6
+
+
+def test_autotune_refuses_xla_ref():
+    x = jnp.zeros((4, 32), jnp.float32)
+    w = jnp.zeros((32, 64), jnp.float32)
+    with pytest.raises(ValueError, match="xla-ref"):
+        autotune.autotune_gemm(x, w, backend="xla-ref")
+
+
+def test_autotune_records_winner_and_gemm_uses_it(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv(autotune.ENV_VAR, str(path))
+    k = jax.random.PRNGKey(1)
+    M, K, N = 4, 32, 128
+    x = jax.random.normal(k, (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(k, 1), (K, N), jnp.float32)
+    cands = [(32, 128, 128), (64, 128, 256)]
+    winner, timings = autotune.autotune_gemm(
+        x, w, backend="pallas-interpret", candidates=cands, repeats=1)
+    # candidates are timed and recorded as given; gemm re-clamps whatever
+    # the table hands back at dispatch time
+    assert winner in cands
+    assert set(timings) == set(cands)
+    assert all(t > 0 for t in timings.values())
+    # the winner is in the table, in the file, and the next blocks=None
+    # trace of this shape resolves it — and stays exact vs the oracle
+    assert autotune.lookup(M, N, K, "dense", "pallas-interpret") == winner
+    payload = json.loads(path.read_text())
+    assert f"{M}x{N}x{K}|dense|pallas-interpret" in payload["blocks"]
+    got = gemm_core.gemm(x, w, backend="pallas-interpret")
+    want = gemm_core.gemm(x, w, backend="xla-ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_autotune_persist_false_stays_in_memory(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv(autotune.ENV_VAR, str(path))
+    autotune.record(2, 64, 32, "dense", "pallas-tpu", (32, 64, 32),
+                    persist=False)
+    assert not path.exists()
+    assert autotune.lookup(2, 64, 32, "dense", "pallas-tpu") == (32, 64, 32)
