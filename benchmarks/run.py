@@ -858,13 +858,33 @@ def bench_sharded_train_scaling(fast=False):
     return out
 
 
+def bench_static_analysis(fast=False):
+    """§4.13: the static contract checker over the full serving matrix +
+    trainer — wall time per analyzed entry (trace-only, no compiles) and
+    the finding counts the CI gate sees."""
+    from repro.analysis import passes, registry, report
+
+    t0 = time.time()
+    engines, traced = registry.build_serving()
+    traced = traced + [registry.build_training()]
+    findings = passes.run_all(engines, traced)
+    wall = time.time() - t0
+    base = report.load_baseline()
+    new, sup = report.split_findings(findings, base)
+    _row("static_analysis_full_matrix", wall * 1e6 / max(len(traced), 1),
+         f"entries={len(traced)};groups={len(engines)};wall_s={wall:.1f};"
+         f"findings={len(findings)};new={len(new)};suppressed={len(sup)}")
+    return wall
+
+
 ALL = [bench_table2_resnet20, bench_table3_bert, bench_table4_vgg7,
        bench_table5_resnet56, bench_fig4a_ablation, bench_fig4b_frontier,
        bench_kernel_fake_quant, bench_kernel_fused_joint, bench_serve_decode,
        bench_engine_prefill, bench_engine_continuous,
        bench_engine_decode_pruned, bench_engine_decode_packed,
        bench_engine_decode_attn, bench_engine_decode_speculative,
-       bench_engine_paged_kv, bench_engine_tp, bench_sharded_train_scaling]
+       bench_engine_paged_kv, bench_engine_tp, bench_sharded_train_scaling,
+       bench_static_analysis]
 
 
 def main() -> None:

@@ -1,0 +1,5 @@
+"""Static contract checker: proves the engine's identity, sharding, and
+VMEM invariants from jaxprs (and optionally compiled HLO) before
+anything runs. See `repro.analysis.verify` for the CLI and DESIGN.md
+§4.13 for the pass catalogue."""
+from repro.analysis.report import Finding, make_finding  # noqa: F401

@@ -1,0 +1,136 @@
+"""Entry-point registry: what the static verifier analyzes.
+
+The unit of analysis is a *traced entry*: one jitted dispatch reachable
+from the serve loop (or the sharded trainer), traced once to a jaxpr via
+`jax.make_jaxpr` with `kernels.introspect` recording the Pallas launches
+the trace would dispatch. Tracing never compiles and never touches
+devices, so the full matrix runs in seconds on the CPU CI host.
+
+The serving side is *engine-derived*: each config group builds a real
+(smoke-scale) engine and asks it for `Engine.entry_points()` — the
+registry never re-states which jits exist, so a new engine dispatch added
+without registry coverage shows up as an uncovered entry, not a silently
+unanalyzed one. Every group is built against an explicit TP mesh
+(`make_tp_mesh(tp)`, tp=1 on single-device hosts) so the sharding-pin
+audit has real NamedShardings to check even on one device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from repro.kernels import introspect
+
+ARCH = "internlm2-1.8b"
+MAX_SLOTS = 2
+MAX_SEQ = 32
+
+# group name -> build_engine kwargs; one group per serving mode of the
+# backend/serving matrix (dense / pruned+packed / paged+quantized KV /
+# speculative / chunked prefill). TP rides on every group via the mesh.
+CONFIGS: dict[str, dict] = {
+    "dense": {},
+    "pruned_packed": {"pruned": True, "packed": True, "sparsity": 0.5,
+                      "bits_init": 4.0},
+    "paged": {"paged": True, "page_size": 8, "kv_bits": 8},
+    "speculative": {"speculative": True, "draft_k": 4,
+                    "draft_sparsity": 0.5, "draft_bits": 2.0},
+    "chunked": {"prefill_chunk": 8},
+}
+
+
+@dataclasses.dataclass
+class TracedEntry:
+    group: str                    # config group ("dense", ..., "train")
+    name: str                     # entry-point name within the group
+    kind: str                     # "serving" | "training"
+    fn: object                    # the jitted callable (for lowering)
+    args: tuple
+    static_argnums: tuple
+    expected_out: object          # pytree of NamedShardings or None
+    jaxpr: object                 # ClosedJaxpr from make_jaxpr
+    launches: list                # introspect launch records
+    tp: int = 1                   # mesh size the entry was built against
+
+    @property
+    def key(self) -> str:
+        return f"{self.group}:{self.name}"
+
+
+def trace_entry(group: str, ep: dict, kind: str = "serving", tp: int = 1
+                ) -> TracedEntry:
+    with introspect.record_launches() as launches:
+        jaxpr = jax.make_jaxpr(
+            ep["fn"], static_argnums=tuple(ep.get("static_argnums", ())))(
+                *ep["args"])
+    return TracedEntry(group=group, name=ep["name"], kind=kind,
+                       fn=ep["fn"], args=tuple(ep["args"]),
+                       static_argnums=tuple(ep.get("static_argnums", ())),
+                       expected_out=ep.get("expected_out"),
+                       jaxpr=jaxpr, launches=list(launches), tp=tp)
+
+
+def build_serving(groups=None, *, arch: str = ARCH, tp: Optional[int] = None,
+                  max_slots: int = MAX_SLOTS, max_seq: int = MAX_SEQ):
+    """Build the engine matrix and trace every entry point.
+
+    Returns (engines, traced): `engines` maps group -> Engine (the
+    compile-set audit reads warmup contracts off the live object),
+    `traced` is the flat TracedEntry list. `tp` defaults to the host
+    device count (1-device hosts get a 1-device TP mesh — sharding pins
+    are still real NamedShardings there)."""
+    from repro.launch.engine import build_engine
+    from repro.launch.mesh import make_tp_mesh
+
+    if tp is None:
+        tp = jax.device_count()
+    mesh = make_tp_mesh(tp)
+    groups = list(groups or CONFIGS)
+    engines, traced = {}, []
+    for group in groups:
+        kwargs = CONFIGS[group]
+        eng, _ = build_engine(arch, True, max_slots=max_slots,
+                              max_seq=max_seq, verbose=False, mesh=mesh,
+                              **kwargs)
+        engines[group] = eng
+        for ep in eng.entry_points():
+            traced.append(trace_entry(group, ep, kind="serving", tp=tp))
+    return engines, traced
+
+
+def build_training(*, arch: str = ARCH, devices: Optional[int] = None,
+                   grad_slices: Optional[int] = None) -> TracedEntry:
+    """Trace one deterministic sharded GETA train step (the
+    `make_ordered_loss_grads` path — DP over the host's devices).
+    `grad_slices` must match the mesh size; it defaults to `devices`."""
+    from repro.configs import CompressionConfig, get_arch
+    from repro.data.synthetic import batch_for
+    from repro.launch.mesh import make_subset_mesh
+    from repro.launch.train import build_geta, make_sharded_geta_train_step
+    from repro.models.transformer import LM
+
+    if devices is None:
+        devices = jax.device_count()
+    if grad_slices is None:
+        grad_slices = devices
+    comp = CompressionConfig(
+        target_sparsity=0.25, bit_lower=4, bit_upper=16, warmup_steps=2,
+        projection_periods=1, projection_steps=2, pruning_periods=1,
+        pruning_steps=2, cooldown_steps=2)
+    cfg = get_arch(arch, smoke=True)
+    lm = LM(cfg)
+    params, _ = lm.init(jax.random.PRNGKey(0))
+    qparams = lm.init_qparams(params, bits_init=16.0)
+    _, qasso = build_geta(lm, comp, lr=3e-3, base_optimizer="momentum")
+    qstate = qasso.init(params, qparams)
+    mesh = make_subset_mesh(devices)
+    jstep, _ = make_sharded_geta_train_step(lm, qasso, mesh, params,
+                                            qparams,
+                                            grad_slices=grad_slices)
+    batch = batch_for(cfg, 0, 0, max(2, devices), 16)
+    ep = {"name": "train_step", "fn": jstep,
+          "args": (params, qparams, qstate, batch), "static_argnums": (),
+          "expected_out": None}
+    return trace_entry("train", ep, kind="training", tp=devices)

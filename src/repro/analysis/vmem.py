@@ -1,0 +1,51 @@
+"""Pass 4 — VMEM budget checker over recorded kernel launches.
+
+The byte models live next to the kernels (`kernels.introspect`, sharing
+`gemm_core.plan_blocks` / `decode_attn.plan_tiles` with the real launch
+code so model and kernel cannot drift); this module turns recorded
+launches into findings against the ~16 MiB/core budget. The same model
+pre-filters autotuner candidates (`autotune.vmem_filter`), so a tile the
+analyzer would reject can never be recorded as a tuning winner either.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.analysis.report import Finding, make_finding
+from repro.kernels import introspect
+
+PASS = "vmem"
+
+
+def launch_slug(launch) -> str:
+    """Stable ID slug for one launch: logical shape + epilogue, never a
+    traversal index — the same kernel launched from two call sites
+    dedups, and reordering the model's layers can't churn the baseline."""
+    if isinstance(launch, introspect.GemmLaunch):
+        return f"gemm:{launch.M}x{launch.N}x{launch.K}:{launch.ops}"
+    return (f"{launch.kind}:B{launch.B}h{launch.KVh}g{launch.g}"
+            f"d{launch.dh}c{launch.chunk}")
+
+
+def audit_vmem(traced_entries, budget: Optional[int] = None
+               ) -> list[Finding]:
+    budget = budget or introspect.VMEM_BUDGET_BYTES
+    findings, seen = [], set()
+    for te in traced_entries:
+        for launch in te.launches:
+            nbytes = introspect.launch_vmem_bytes(launch)
+            if nbytes <= budget:
+                continue
+            slug = launch_slug(launch)
+            fid_key = (te.group, te.name, slug)
+            if fid_key in seen:
+                continue
+            seen.add(fid_key)
+            findings.append(make_finding(
+                PASS, te.group, te.name, slug,
+                f"tile footprint ~{nbytes / 2**20:.1f} MiB exceeds the "
+                f"{budget / 2**20:.0f} MiB VMEM budget: "
+                f"{launch.describe()}",
+                detail={"bytes": int(nbytes), "budget": int(budget),
+                        "launch": launch.describe()}))
+    return findings

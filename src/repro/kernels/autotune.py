@@ -128,16 +128,49 @@ def candidate_blocks(M: int, N: int, K: int
     return out
 
 
+def vmem_filter(candidates, M: int, N: int, K: int, rhs_ops=(), *,
+                w_itemsize: int = 4, budget: Optional[int] = None):
+    """Split candidate (bm, bn, bk) tiles by the static VMEM model.
+
+    Each candidate resolves through `gemm_core.plan_blocks` — the exact
+    tile `gemm` would launch — and its footprint is estimated by
+    `introspect.gemm_vmem_bytes`. Returns (fits, rejected) where
+    `rejected` maps the candidate to its estimated bytes; `budget`
+    defaults to `introspect.VMEM_BUDGET_BYTES` (~16 MiB/core)."""
+    from repro.kernels import gemm_core, introspect
+    k_pack = rhs_ops[0].k_pack if rhs_ops else 1
+    n_col = sum(kk == gemm_core.COL for op in rhs_ops for kk in op.kinds)
+    n_scalar = sum(kk == gemm_core.SCALAR
+                   for op in rhs_ops for kk in op.kinds)
+    budget = budget or introspect.VMEM_BUDGET_BYTES
+    fits, rejected = [], {}
+    for blocks in candidates:
+        plan = gemm_core.plan_blocks(M, N, K, k_pack, tuple(blocks))
+        nbytes = introspect.gemm_vmem_bytes(introspect.GemmLaunch(
+            M=M, N=N, K=K, k_pack=k_pack, n_col=n_col, n_scalar=n_scalar,
+            ops=ops_key(rhs_ops), backend="static", blocks=plan,
+            w_itemsize=w_itemsize))
+        if nbytes > budget:
+            rejected[tuple(blocks)] = nbytes
+        else:
+            fits.append(tuple(blocks))
+    return fits, rejected
+
+
 def autotune_gemm(x, w, rhs_ops=(), *, backend: Optional[str] = None,
                   candidates=None, repeats: int = 3, out_dtype=None,
-                  persist: bool = True):
+                  persist: bool = True, vmem_budget: Optional[int] = None):
     """Time `gemm` over the candidate tiles, record + return the winner.
 
     Returns (best_blocks, {blocks: seconds}). Each candidate is compiled
     once (untimed) then timed best-of-`repeats` with blocked dispatches.
     The winner lands in the in-memory table immediately — the very next
     `gemm(..., blocks=None)` trace of this shape picks it up — and in the
-    cache file when ``REPRO_GEMM_TUNE_CACHE`` is set and `persist`."""
+    cache file when ``REPRO_GEMM_TUNE_CACHE`` is set and `persist`.
+
+    Candidates whose static VMEM footprint exceeds `vmem_budget`
+    (default: the ~16 MiB/core TPU budget) are dropped *before* timing —
+    a tile that would OOM real VMEM must not win a CPU-interpret race."""
     from repro.kernels import dispatch, gemm_core
     backend = dispatch.resolve(backend)
     if backend == "xla-ref":
@@ -148,6 +181,13 @@ def autotune_gemm(x, w, rhs_ops=(), *, backend: Optional[str] = None,
     N = w.shape[1]
     K_logical = K if k_pack == 1 else K    # x carries logical K already
     cands = list(candidates or candidate_blocks(M, N, K_logical))
+    cands, rejected = vmem_filter(cands, M, N, K_logical, rhs_ops,
+                                  w_itemsize=w.dtype.itemsize,
+                                  budget=vmem_budget)
+    if not cands:
+        raise ValueError(
+            f"every candidate tile exceeds the VMEM budget "
+            f"({ {k: v for k, v in sorted(rejected.items())} })")
     timings: dict[tuple[int, int, int], float] = {}
     for blocks in cands:
         fn = jax.jit(lambda a, b: gemm_core.gemm(

@@ -99,6 +99,27 @@ def _kernel(nv_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
         o_ref[0, 0] = o_ref[0, 0] / jnp.maximum(l_ref[:, :1], 1e-30)
 
 
+def plan_tiles(g: int, dh: int, S: int, chunk: int | None = None, *,
+               align: int = 128) -> tuple[int, int, int]:
+    """Resolve the (gp, dhp, chunk) tile geometry the flash-decode kernel
+    launches for a (g, dh, S) problem at the given lane alignment (128
+    compiled, 8 interpret). Shared by `decode_attn_pallas` and the static
+    VMEM model (`kernels.introspect`) so they cannot drift."""
+    chunk = int(chunk or DEFAULT_CHUNK)
+    chunk = max(align, min(_round_up(chunk, align), _round_up(S, align)))
+    return _round_up(g, 8), _round_up(dh, align), chunk
+
+
+def plan_paged_tiles(g: int, dh: int, dhs: int, kv_bits: int | None, *,
+                     align: int = 128) -> tuple[int, int, int]:
+    """(gp, dhp, dhsp) for the paged kernel: the stored byte width `dhs`
+    pads to the lane tile and nibble unpack doubles it back to >= dh.
+    Shared with the static VMEM model like `plan_tiles`."""
+    dhsp = _round_up(dhs, align)
+    dhp = dhsp * 2 if kv_bits == 4 else dhsp
+    return _round_up(g, 8), dhp, dhsp
+
+
 def decode_attn_pallas(q, k, v, pos, *, window: int = 0,
                        chunk: int | None = None,
                        interpret: bool = False) -> jax.Array:
@@ -126,11 +147,8 @@ def decode_attn_pallas(q, k, v, pos, *, window: int = 0,
     # Compiled TPU tiles want 128-lane alignment; the interpreter (CPU
     # parity tier) runs any shape, so it may tile at the 8-sublane floor.
     align = 8 if interpret else 128
-    chunk = int(chunk or DEFAULT_CHUNK)
-    chunk = max(align, min(_round_up(chunk, align), _round_up(S, align)))
+    gp, dhp, chunk = plan_tiles(g, dh, S, chunk, align=align)
     Sp = _round_up(S, chunk)
-    gp = _round_up(g, 8)
-    dhp = _round_up(dh, align)
 
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, gp - g), (0, dhp - dh)))
     kp = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, dhp - dh)))
@@ -301,9 +319,7 @@ def paged_decode_attn_pallas(q, kpool, vpool, pos, page_table, *, page_size,
     align = 8 if interpret else 128
 
     # Pad the code byte stream; nibble unpack doubles it back to >= dh.
-    dhsp = _round_up(dhs, align)
-    dhp = dhsp * 2 if kv_bits == 4 else dhsp
-    gp = _round_up(g, 8)
+    gp, dhp, dhsp = plan_paged_tiles(g, dh, dhs, kv_bits, align=align)
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, gp - g), (0, dhp - dh)))
     kp = jnp.pad(kpool, ((0, 0), (0, 0), (0, 0), (0, dhsp - dhs)))
     vp = jnp.pad(vpool, ((0, 0), (0, 0), (0, 0), (0, dhsp - dhs)))

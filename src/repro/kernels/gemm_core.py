@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.quant import _EPS, clip_qmt, unpack_codes
-from repro.kernels import dispatch
+from repro.kernels import dispatch, introspect
 
 DEFAULT_BLOCKS = (128, 128, 128)  # bm, bn, bk
 
@@ -163,6 +163,23 @@ def _clamp_blocks(blocks, M, N, K):
             min(bk, max(128, K)))
 
 
+def plan_blocks(M: int, N: int, K: int, k_pack: int = 1, blocks=None
+                ) -> tuple[int, int, int, int]:
+    """Resolve the final (bm, bn, bk, bkw) tile `gemm` would launch for an
+    (M, N, K) problem: the clamp rule above plus the packed-K word
+    alignment (bk must cover whole words *and* keep both tiles MXU-legal:
+    a multiple of the 128-lane x tiling with bk/k_pack a multiple of 8
+    sublanes — lcm(k_pack*8, 128), a no-op 128 for bits 2/4/8 and 640 for
+    the bits=3 10-codes stream). Shared by `gemm` and the static VMEM
+    model (`kernels.introspect`) so the footprint the analyzer budgets is
+    the tile the kernel actually dispatches."""
+    bm, bn, bk = _clamp_blocks(blocks or DEFAULT_BLOCKS, M, N, K)
+    if k_pack > 1:
+        bk = math.lcm(k_pack * 8, max(bk, 128))
+        return bm, bn, bk, bk // k_pack
+    return bm, bn, bk, bk
+
+
 def gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,
          blocks=None, backend: str | None = None,
          out_dtype=None) -> jax.Array:
@@ -197,6 +214,19 @@ def gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,
         blocks = autotune.lookup(M, N, K, autotune.ops_key(rhs_ops),
                                  backend) or DEFAULT_BLOCKS
 
+    plan = plan_blocks(M, N, K, k_pack, blocks)
+    if introspect.recording():
+        # the tile the compiled-TPU path would launch, recorded even when
+        # this trace routes to xla-ref (CPU CI statically audits the TPU
+        # footprint — see kernels.introspect)
+        from repro.kernels import autotune
+        introspect.note(introspect.GemmLaunch(
+            M=M, N=N, K=K, k_pack=k_pack,
+            n_col=sum(k == COL for op in rhs_ops for k in op.kinds),
+            n_scalar=sum(k == SCALAR for op in rhs_ops for k in op.kinds),
+            ops=autotune.ops_key(rhs_ops), backend=backend, blocks=plan,
+            w_itemsize=w.dtype.itemsize))
+
     if backend == "xla-ref":
         w32 = w if k_pack > 1 else w.astype(jnp.float32)
         for op in rhs_ops:
@@ -209,14 +239,7 @@ def gemm(x: jax.Array, w: jax.Array, rhs_ops: tuple[RhsOp, ...] = (), *,
         y = x.astype(jnp.float32) @ w32
         return y.astype(out_dtype)
 
-    bm, bn, bk = _clamp_blocks(blocks, M, N, K)
-    if k_pack > 1:
-        # bk must cover whole words (the packed tile rides the same K grid
-        # axis at bk/k_pack rows) AND keep both tiles MXU-aligned: bk a
-        # multiple of the 128-lane x tiling and bk/k_pack a multiple of 8
-        # sublanes. lcm(k_pack*8, 128) satisfies both — a no-op 128 for
-        # bits 2/4/8, and 640 (64 words) for the bits=3 10-codes stream.
-        bk = math.lcm(k_pack * 8, max(bk, 128))
+    bm, bn, bk, _ = plan
     pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
     xp = jnp.pad(x, ((0, pm), (0, pk))) if (pm or pk) else x
     Mp, Kp = xp.shape

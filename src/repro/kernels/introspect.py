@@ -1,0 +1,152 @@
+"""Static launch introspection + VMEM footprint models for the kernels.
+
+The static verifier (`repro.analysis`) needs to know, for a traced engine
+entry point, which Pallas launches the trace would dispatch on a TPU and
+at what tile geometry — *without* running anything and *without* a TPU:
+on CPU the dispatch layer routes every op to the xla-ref oracle, so the
+Pallas wrappers themselves never execute. The hooks therefore live at the
+dispatch layer (`ops.decode_attn_op`, `gemm_core.gemm`), *after* block
+resolution but *before* the backend branch: every backend records the
+tile the compiled-TPU path would use.
+
+Recording is off by default and costs one `is None` check per traced op.
+`record_launches()` turns it on for the duration of a trace:
+
+    with introspect.record_launches() as launches:
+        jax.make_jaxpr(engine._decode)(params, qparams, caches, tok, pos)
+    # launches: [GemmLaunch(...), AttnLaunch(...), ...]
+
+The VMEM byte models below are deliberately simple upper-estimate
+arithmetic over the block specs (2x double-buffering on grid-streamed
+blocks, accumulator + scratch resident, decoded packed tile materialized
+in-VMEM) against the ~16 MiB/core budget from the Pallas TPU guide. They
+are used by the analysis `vmem` pass *and* by `autotune.autotune_gemm` to
+refuse timing candidate tiles that could not fit on real hardware.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+# Per-core VMEM on current TPU generations (the Pallas guide's planning
+# number). The budget below leaves headroom for compiler-managed
+# temporaries; tiles past it are rejected statically.
+VMEM_BYTES = 16 * 1024 * 1024
+VMEM_BUDGET_BYTES = VMEM_BYTES
+
+_F32 = 4
+_LANES = 128        # mirror of decode_attn._LANES (scratch minor dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmLaunch:
+    """One `gemm_core.gemm` dispatch: logical shape + resolved tile."""
+    M: int
+    N: int
+    K: int
+    k_pack: int                       # codes per int32 word (1 = unpacked)
+    n_col: int                        # COL (1, bn) operand count
+    n_scalar: int                     # SCALAR (1, 1) operand count
+    ops: str                          # autotune.ops_key epilogue identity
+    backend: str
+    blocks: tuple[int, int, int, int]  # (bm, bn, bk, bkw) final tile
+    w_itemsize: int = 4
+
+    kind = "gemm"
+
+    def describe(self) -> str:
+        bm, bn, bk, bkw = self.blocks
+        return (f"gemm {self.M}x{self.N}x{self.K}|{self.ops} "
+                f"tile bm={bm} bn={bn} bk={bk} bkw={bkw}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnLaunch:
+    """One flash-decode attention dispatch (contiguous or paged)."""
+    kind: str                         # "decode_attn" | "paged_decode_attn"
+    B: int
+    KVh: int
+    g: int                            # query heads per KV head
+    dh: int
+    gp: int                           # padded block dims (compiled align)
+    dhp: int
+    chunk: int                        # K rows per grid step (page_size
+    #                                   for the paged kernel)
+    kv_itemsize: int = 4              # pool element bytes (1 for codes)
+    scaled: bool = False              # per-row scale blocks ride along
+
+    def describe(self) -> str:
+        return (f"{self.kind} B={self.B} KVh={self.KVh} g={self.g} "
+                f"dh={self.dh} tile gp={self.gp} dhp={self.dhp} "
+                f"chunk={self.chunk}")
+
+
+_records: Optional[list] = None
+
+
+@contextlib.contextmanager
+def record_launches():
+    """Collect every kernel-dispatch note issued while tracing inside the
+    block. Reentrant use shares the innermost list (the analysis registry
+    traces one entry at a time)."""
+    global _records
+    prev = _records
+    _records = [] if prev is None else prev
+    try:
+        yield _records
+    finally:
+        _records = prev
+
+
+def recording() -> bool:
+    return _records is not None
+
+
+def note(launch) -> None:
+    if _records is not None:
+        _records.append(launch)
+
+
+# ------------------------------------------------------- VMEM byte models
+def gemm_vmem_bytes(launch: GemmLaunch) -> int:
+    """Estimated VMEM bytes for one gemm tile-program.
+
+    2x double-buffering on the streamed input blocks (x, w, COL/SCALAR
+    operands), the f32 output accumulator (kept 2x: the (i, j) revisit
+    pattern still overlaps the next block's prologue), plus — when the
+    RHS is a packed word stream — the decoded f32 (bk, bn) tile the
+    unpack epilogue materializes before the dot."""
+    bm, bn, bk, bkw = launch.blocks
+    x_tile = bm * bk * _F32
+    w_tile = bkw * bn * launch.w_itemsize
+    operands = launch.n_col * bn * _F32 + launch.n_scalar * _F32
+    out_tile = bm * bn * _F32
+    decoded = bk * bn * _F32 if launch.k_pack > 1 else 0
+    return 2 * (x_tile + w_tile + operands) + 2 * out_tile + decoded
+
+
+def attn_vmem_bytes(launch: AttnLaunch) -> int:
+    """Estimated VMEM bytes for one flash-decode tile-program: q and out
+    blocks, double-buffered K/V chunk blocks (+ per-row scales when the
+    pool holds codes), the running max/denom scratch, and the (gp, chunk)
+    f32 probability tile the online softmax materializes per chunk."""
+    q_tile = launch.gp * launch.dhp * _F32
+    kv = 2 * launch.chunk * launch.dhp * launch.kv_itemsize
+    scales = 2 * launch.chunk * _F32 if launch.scaled else 0
+    out_tile = launch.gp * launch.dhp * _F32
+    scratch = 2 * launch.gp * _LANES * _F32
+    probs = launch.gp * launch.chunk * _F32
+    return 2 * (q_tile + kv + scales) + 2 * out_tile + scratch + probs
+
+
+def launch_vmem_bytes(launch) -> int:
+    if isinstance(launch, GemmLaunch):
+        return gemm_vmem_bytes(launch)
+    if isinstance(launch, AttnLaunch):
+        return attn_vmem_bytes(launch)
+    raise TypeError(f"not a launch record: {launch!r}")
+
+
+def over_budget(launch, budget: Optional[int] = None) -> bool:
+    return launch_vmem_bytes(launch) > (budget or VMEM_BUDGET_BYTES)

@@ -30,6 +30,7 @@ from repro.kernels import decode_attn as _da
 from repro.kernels import dispatch
 from repro.kernels import fake_quant as _fq
 from repro.kernels import gemm_core as _gc
+from repro.kernels import introspect
 from repro.kernels import ref as _ref
 from repro.core.quant import fake_quant as _fake_quant_xla
 
@@ -162,6 +163,14 @@ def decode_attn_op(q, k, v, pos, *, window=0, chunk=None, interpret=None,
     `kernels.decode_attn`; the xla-ref backend runs the legacy einsum
     composition (`ref.decode_attn_ref`) bit-for-bit."""
     backend = dispatch.resolve(backend, interpret)
+    if introspect.recording():
+        # record the compiled-TPU tile geometry regardless of which
+        # backend this trace routes to (see kernels.introspect)
+        B, KVh, g, dh = q.shape
+        gp, dhp, ch = _da.plan_tiles(g, dh, k.shape[1], chunk)
+        introspect.note(introspect.AttnLaunch(
+            kind="decode_attn", B=B, KVh=KVh, g=g, dh=dh, gp=gp, dhp=dhp,
+            chunk=ch, kv_itemsize=k.dtype.itemsize))
     if backend == "xla-ref":
         return _ref.decode_attn_ref(q, k, v, pos, window=window)
     return _da.decode_attn_pallas(q, k, v, pos, window=window, chunk=chunk,
@@ -185,6 +194,13 @@ def paged_decode_attn_op(q, kpool, vpool, pos, page_table, *, page_size,
     bit-identical to the contiguous one (see `ref.paged_decode_attn_ref`).
     """
     backend = dispatch.resolve(backend, interpret)
+    if introspect.recording():
+        B, KVh, g, dh = q.shape
+        gp, dhp, _ = _da.plan_paged_tiles(g, dh, kpool.shape[-1], kv_bits)
+        introspect.note(introspect.AttnLaunch(
+            kind="paged_decode_attn", B=B, KVh=KVh, g=g, dh=dh, gp=gp,
+            dhp=dhp, chunk=int(page_size), kv_itemsize=kpool.dtype.itemsize,
+            scaled=kv_bits is not None))
     if backend == "xla-ref":
         return _ref.paged_decode_attn_ref(
             q, kpool, vpool, pos, page_table, page_size=page_size,

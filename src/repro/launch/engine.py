@@ -361,11 +361,17 @@ class Engine:
         self._prefill = _jit(_prefill,
                              out_shardings=((self._rep, self._row_sh)
                                             if mesh is not None else None))
-        # _insert serves both arenas (target rows AND draft rows share the
-        # one jit, keyed by avals) so it can't pin a single out_shardings
-        # tree; dynamic_update_slice propagates the operand's sharding,
-        # which is exactly what we want
-        self._insert = jax.jit(_insert)
+        # _insert used to serve both arenas (target AND draft rows through
+        # one unpinned jit, keyed by avals) relying on dynamic_update_slice
+        # propagating the operand's sharding — the exact operand-propagation
+        # hole the sharding-pin audit (repro.analysis, DESIGN.md §4.13)
+        # exists to flag. Each arena now gets its own pinned clone:
+        # _insert writes target rows under the target arena's sharding
+        # tree, _insert_d (created only with a draft attached) under the
+        # draft's. Same function, same per-arena compile count as before.
+        self._insert = _jit(_insert, out_shardings=self._arena_sh)
+        self._insert_d = (_jit(_insert, out_shardings=self._darena_sh)
+                          if draft is not None else None)
         self._decode = _jit(_decode,
                             out_shardings=((self._rep, self._arena_sh)
                                            if mesh is not None else None))
@@ -704,8 +710,8 @@ class Engine:
                     drow = self._prefill_draft(self.draft.params,
                                                self.draft.qparams,
                                                jnp.asarray(req.prompt)[None])
-                    self.dcaches = self._insert(self.dcaches, drow,
-                                                jnp.int32(slot))
+                    self.dcaches = self._insert_d(self.dcaches, drow,
+                                                  jnp.int32(slot))
                     jax.block_until_ready(
                         jax.tree_util.tree_leaves(self.dcaches)[0])
                     self.stats["draft_prefill_s"] += time.time() - t1
@@ -1046,8 +1052,8 @@ class Engine:
             drow = self._prefill_draft(self.draft.params,
                                        self.draft.qparams,
                                        jnp.asarray(req.prompt)[None])
-            self.dcaches = self._insert(self.dcaches, drow,
-                                        jnp.int32(slot))
+            self.dcaches = self._insert_d(self.dcaches, drow,
+                                          jnp.int32(slot))
             jax.block_until_ready(
                 jax.tree_util.tree_leaves(self.dcaches)[0])
             self.stats["draft_prefill_s"] += time.time() - t1
@@ -1127,6 +1133,19 @@ class Engine:
 
     MAX_WINDOW = 32
 
+    def warmed_window_ks(self) -> list[int]:
+        """Window lengths `warmup()` precompiles: powers of two up to
+        MAX_WINDOW. `_window` quantizes every dispatch to
+        min(pow2_floor(remaining), MAX_WINDOW), so this set must cover
+        everything reachable — the compile-set audit (repro.analysis)
+        recomputes the reachable set independently and diffs it against
+        this one."""
+        ks, k = [], 1
+        while k <= self.MAX_WINDOW:
+            ks.append(k)
+            k *= 2
+        return ks
+
     def warmup(self) -> None:
         """Compile the decode dispatches on dummy inputs (slot state and
         caches untouched) so the first timed window measures decode, not
@@ -1170,8 +1189,7 @@ class Engine:
                                       self.caches, tok, pos)
             jax.block_until_ready(nxt)
         else:
-            k = 1
-            while k <= self.MAX_WINDOW:
+            for k in self.warmed_window_ks():
                 if self.paged:
                     toks, _ = self._decode_window_paged(
                         self.params, self.qparams, self.caches, tok, pos,
@@ -1180,7 +1198,6 @@ class Engine:
                     toks, _ = self._decode_window(self.params, self.qparams,
                                                   self.caches, tok, pos, k)
                 jax.block_until_ready(toks)
-                k *= 2
         if self._chunk:
             from repro.launch.scheduler import chunk_buckets
             row = self._fresh_row()
@@ -1218,8 +1235,8 @@ class Engine:
         stay at 1 (tests/test_scheduler.py asserts it), so a shape leak
         in the chunk plan can't silently recompile mid-serve."""
         out = {}
-        for name in ("_prefill", "_prefill_chunk", "_insert", "_decode",
-                     "_decode_window", "_decode_paged",
+        for name in ("_prefill", "_prefill_chunk", "_insert", "_insert_d",
+                     "_decode", "_decode_window", "_decode_paged",
                      "_decode_window_paged", "_insert_pages",
                      "_zero_pages", "_copy_page", "_spec", "_spec_paged",
                      "_prefill_draft"):
@@ -1227,6 +1244,98 @@ class Engine:
             if fn is not None and hasattr(fn, "_cache_size"):
                 out[name] = int(fn._cache_size())
         return out
+
+    def entry_points(self) -> list[dict]:
+        """The static-analysis registry (repro.analysis, DESIGN.md §4.13):
+        every jitted dispatch the serve loop can reach for *this* engine's
+        configuration, with example arguments at its real shapes and the
+        out-sharding contract each must pin. Tracing an entry never runs
+        device code (`jax.make_jaxpr` only), and the example rows/arrays
+        are never inserted into live state.
+
+        Each entry: name, fn (the jit), args (example tuple),
+        static_argnums, expected_out (pytree of NamedShardings for
+        arena/row-returning jits under TP — the same `kv_cache_specs` /
+        replicated trees the constructor pinned — or None when unsharded
+        or the output carries no arena)."""
+        tok = jnp.zeros((self.max_slots, 1), jnp.int32)
+        pos = jnp.zeros((self.max_slots,), jnp.int32)
+        prompt = jnp.zeros((1, min(8, self.max_seq)), jnp.int32)
+        rep, arena, row_sh = self._rep, self._arena_sh, self._row_sh
+        tp = self.mesh is not None
+        eps: list[dict] = []
+
+        def add(name, fn, args, static=(), out=None):
+            eps.append(dict(name=name, fn=fn, args=tuple(args),
+                            static_argnums=tuple(static),
+                            expected_out=out if tp else None))
+
+        add("prefill", self._prefill, (self.params, self.qparams, prompt),
+            out=(rep, row_sh))
+        row = self._fresh_row()
+        if self.paged:
+            pt = jnp.asarray(self.page_table)
+            npp = paging.pages_for_rows(int(prompt.shape[1]), self.page_size)
+            phys = jnp.zeros((npp,), jnp.int32)
+            ids = jnp.zeros((4,), jnp.int32)
+            add("insert_pages", self._insert_pages,
+                (self.caches, row, jnp.int32(0), phys, npp), static=(4,),
+                out=arena)
+            add("zero_pages", self._zero_pages, (self.caches, ids),
+                out=arena)
+            add("copy_page", self._copy_page,
+                (self.caches, jnp.int32(1), jnp.int32(2)), out=arena)
+            if self.draft is None:
+                add("decode_paged", self._decode_paged,
+                    (self.params, self.qparams, self.caches, tok, pos, pt),
+                    out=(rep, arena))
+                add("decode_window_paged", self._decode_window_paged,
+                    (self.params, self.qparams, self.caches, tok, pos, pt,
+                     2), static=(6,), out=(rep, arena))
+        else:
+            add("insert", self._insert, (self.caches, row, jnp.int32(0)),
+                out=arena)
+            if self.draft is None:
+                add("decode", self._decode,
+                    (self.params, self.qparams, self.caches, tok, pos),
+                    out=(rep, arena))
+                add("decode_window", self._decode_window,
+                    (self.params, self.qparams, self.caches, tok, pos, 2),
+                    static=(5,), out=(rep, arena))
+        if self.draft is not None:
+            from repro.launch.speculative import pow2_floor
+            k = pow2_floor(self.draft_k)
+            add("prefill_draft", self._prefill_draft,
+                (self.draft.params, self.draft.qparams, prompt),
+                out=self._drow_sh)
+            drow = self.draft.lm.init_cache(1, self.max_seq,
+                                            dtype=self._cache_dtype)
+            if tp:
+                drow = jax.device_put(drow, self._drow_sh)
+            if self.paged:
+                add("spec_paged", self._spec_paged,
+                    (self.params, self.qparams, self.draft.params,
+                     self.draft.qparams, self.caches, self.dcaches, tok,
+                     pos, jnp.asarray(self.page_table), k), static=(9,),
+                    out=(rep, rep, arena, self._darena_sh))
+                add("insert_pages_d", self._insert_pages_d,
+                    (self.dcaches, drow, jnp.int32(0), phys, npp),
+                    static=(4,), out=self._darena_sh)
+            else:
+                add("spec", self._spec,
+                    (self.params, self.qparams, self.draft.params,
+                     self.draft.qparams, self.caches, self.dcaches, tok,
+                     pos, k), static=(8,),
+                    out=(rep, rep, arena, self._darena_sh))
+                add("insert_d", self._insert_d,
+                    (self.dcaches, drow, jnp.int32(0)),
+                    out=self._darena_sh)
+        if self._chunk:
+            add("prefill_chunk", self._prefill_chunk,
+                (self.params, self.qparams, self._fresh_row(),
+                 jnp.zeros((1, self._chunk), jnp.int32),
+                 jnp.zeros((1,), jnp.int32)), out=(rep, row_sh))
+        return eps
 
     def _window(self) -> bool:
         """Admit, then decode up to the next scheduled eviction in one
@@ -1404,7 +1513,8 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
                  page_size: int = 16, kv_bits: int | None = None,
                  n_pages: int | None = None,
                  prefix_sharing: bool = True, tp: int = 0,
-                 prefill_chunk: int | None = None) -> tuple[Engine, LM]:
+                 prefill_chunk: int | None = None,
+                 mesh=None) -> tuple[Engine, LM]:
     """Init an LM at `arch` scale and wrap it in an Engine.
 
     `pruned` serves the physically sliced subnet: `prepare_serving` builds
@@ -1448,8 +1558,9 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
         lm, params, quantized=quantized, compressed=compressed,
         packed=packed, bits_init=bits_init, keep_masks=keep_masks,
         prune_sparsity=(sparsity if pruned and keep_masks is None else None))
-    mesh = None
-    if tp and tp > 1:
+    # an explicit `mesh` overrides tp — the static analyzer passes a
+    # 1-device TP mesh so the sharding-pin audit runs on single-device CI
+    if mesh is None and tp and tp > 1:
         from repro.launch.mesh import make_tp_mesh
         mesh = make_tp_mesh(tp)
     scheduler = None
@@ -1464,7 +1575,7 @@ def build_engine(arch: str, smoke: bool = True, *, quantized: bool = True,
     meta["kv_bytes"] = eng.kv_bytes()
     if mesh is not None:
         meta["tp"] = {
-            "devices": int(tp),
+            "devices": int(mesh.size),
             "param_bytes_per_device": eng.param_bytes(per_device=True),
             "kv_bytes_per_device": eng.kv_bytes(per_device=True),
             "replicated_fallbacks": sorted({n for n, _, _

@@ -56,6 +56,18 @@ def chunk_plan(s: int, chunk: int) -> list[int]:
     return out
 
 
+def reachable_chunk_shapes(max_prompt: int, chunk: int) -> set[int]:
+    """Every chunk length `chunk_plan` can emit for any prompt length in
+    [1, max_prompt] — brute-force enumeration, *intentionally* independent
+    of `chunk_buckets`: the static compile-set audit (repro.analysis)
+    diffs this set against the warmup contract, so the two must not share
+    an implementation that could be wrong in the same way."""
+    out: set[int] = set()
+    for s in range(1, max_prompt + 1):
+        out.update(chunk_plan(s, chunk))
+    return out
+
+
 def chunk_buckets(chunk: int) -> list[int]:
     """Every chunk length `chunk_plan` can emit: {chunk} ∪ {2^i < chunk}.
     The warmup contract — one prefill-chunk compile per bucket, and no

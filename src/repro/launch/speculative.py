@@ -80,6 +80,17 @@ def pow2_floor(k: int) -> int:
     return 0 if k < 1 else 1 << (k.bit_length() - 1)
 
 
+def reachable_spec_ks(draft_k: int, max_seq: int) -> set[int]:
+    """Every draft-window length `Engine._spec_round` can dispatch:
+    k_eff = pow2_floor(min(draft_k, remaining - 1)) enumerated over every
+    possible remaining-budget value in [1, max_seq]. Brute force on
+    purpose — the static compile-set audit (repro.analysis) diffs this
+    against the warmup contract (`Engine._spec_ks`), so it must be an
+    independent derivation."""
+    return {pow2_floor(min(int(draft_k), rem - 1))
+            for rem in range(1, int(max_seq) + 1)}
+
+
 def rollback_rows(caches: dict, lo, hi) -> dict:
     """Zero arena rows s in [lo[b], hi[b]] for every slot b.
 
